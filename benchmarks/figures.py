@@ -1,0 +1,380 @@
+"""One benchmark per paper figure (Figs. 3, 9–20).
+
+Each function returns a list of CSV rows ``(name, us_per_call, derived)``
+where ``derived`` carries the figure's headline metric(s); raw results are
+also dumped to ``experiments/bench/<fig>.json``.
+
+Scales are reduced vs the paper's 80-GPU testbed (CPU-only container) but
+keep the paper's RATIOS: same SLO classes, same workload mixes, same
+policies, request counts 400–1000 per point.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.qlm import QLMConfig
+from repro.core.rwt_estimator import RWTEstimator, WorkloadProfile
+from repro.data.workload import workload_a, workload_b, workload_c
+from repro.sim import ClusterSimulator, profiles_for
+from repro.sim.profiles import DEVICE_PROFILES
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+WB_MODELS = ["mistral-7b-ft", "llama-70b-ft1", "vicuna-13b-ft",
+             "llama-70b-ft2", "vicuna-13b-ft2"]
+POLICIES = ("vllm", "edf", "shepherd", "qlm")
+
+
+def _dump(name: str, payload) -> None:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1)
+
+
+def _row(name: str, wall_s: float, derived: str):
+    return (name, f"{wall_s * 1e6:.0f}", derived)
+
+
+def _run(policy, reqs, models, n_inst, device="a100", **kw):
+    profs = [profiles_for(device, models) for _ in range(n_inst)]
+    sim = ClusterSimulator(profs, policy, **kw)
+    return sim.run(reqs)
+
+
+# ---------------------------------------------------------------------------
+
+def fig3_waiting_time_linearity() -> List:
+    """Waiting time vs queue position is linear (Insight #1): run one
+    saturated instance FCFS per model, regress wait on position."""
+    t0 = time.monotonic()
+    out = {}
+    for model in ("mistral-7b", "vicuna-13b", "llama-70b"):
+        reqs = workload_a(arrival_rate=500, n_requests=600, seed=0, model=model)
+        for r in reqs:
+            r.slo = 1e9  # pure FCFS drain, no deadline effects
+        m = _run("vllm", reqs, [model], n_inst=1)
+        waits = np.array([r.ttft() for r in reqs])
+        # regress the QUEUED region: the first ~batch-size requests are
+        # admitted immediately (wait ≈ 0) and are not queue positions.
+        first_queued = int(np.argmax(waits > 2 * waits[:16].mean() + 1e-9))
+        pos = np.arange(len(waits))[first_queued:]
+        w = waits[first_queued:]
+        A = np.vstack([pos, np.ones_like(pos)]).T
+        coef, res, *_ = np.linalg.lstsq(A, w, rcond=None)
+        ss_tot = float(((w - w.mean()) ** 2).sum())
+        r2 = 1 - float(res[0]) / ss_tot if len(res) else 1.0
+        out[model] = {"slope_s_per_req": coef[0], "r2": r2,
+                      "first_queued": first_queued}
+    _dump("fig3", out)
+    worst = min(v["r2"] for v in out.values())
+    return [_row("fig3_waiting_linearity", time.monotonic() - t0,
+                 f"min_R2={worst:.3f} (paper: 0.99)")]
+
+
+def fig9_10_single_model(rates=(20, 60, 160, 400)) -> List:
+    """Fig. 9 (throughput @ saturating rate) + Fig. 10 (SLO vs rate), W_A.
+
+    2 instances × 2000 requests so the queue depth far exceeds the running
+    batch (the paper's regime: 'queues are created by varying arrival
+    rates'); at the top rate demand ≈ 6× token throughput."""
+    t0 = time.monotonic()
+    out: Dict[str, Dict] = {p: {} for p in POLICIES}
+    for policy in POLICIES:
+        for rate in rates:
+            reqs = workload_a(arrival_rate=rate, n_requests=2000, seed=1)
+            m = _run(policy, reqs, ["vicuna-13b"], n_inst=2)
+            out[policy][rate] = m
+    _dump("fig9_10", out)
+    rows = []
+    sat = rates[2]
+    thr = {p: out[p][sat]["throughput_rps"] for p in POLICIES}
+    rows.append(_row("fig9_single_model_throughput", time.monotonic() - t0,
+                     f"qlm/vllm={thr['qlm']/max(thr['vllm'],1e-9):.2f}x "
+                     f"qlm/shepherd={thr['qlm']/max(thr['shepherd'],1e-9):.2f}x"))
+    slo = {p: out[p][sat]["slo_attainment"] for p in POLICIES}
+    rows.append(_row("fig10_single_model_slo", 0,
+                     f"qlm={slo['qlm']:.2f} vllm={slo['vllm']:.2f} "
+                     f"edf={slo['edf']:.2f} shepherd={slo['shepherd']:.2f}"))
+    return rows
+
+
+def fig11_single_model_ablation(rate=1.5) -> List:
+    """Fig. 11: remove each LSO from QLM (single model => swap moot).
+    A10-class KV capacity (7k tokens) so batch requests genuinely block
+    interactive admissions — the paper's eviction scenario (Insight #2)."""
+    t0 = time.monotonic()
+    variants = {
+        "qlm_full": {},
+        "no_eviction": {"uses_eviction": False},
+        "no_reordering": {"reorders": False},
+    }
+    out = {}
+    for name, override in variants.items():
+        reqs = workload_a(arrival_rate=rate, n_requests=400, seed=2)
+        kw = {"traits_override": override} if override else {}
+        out[name] = _run("qlm", reqs, ["vicuna-13b"], n_inst=2, device="a10", **kw)
+    _dump("fig11", out)
+    return [_row("fig11_lso_ablation_single", time.monotonic() - t0,
+                 " ".join(f"{k}={v['slo_attainment']:.2f}"
+                          for k, v in out.items()))]
+
+
+def fig12_13_multi_model(rates=(10, 25, 50)) -> List:
+    t0 = time.monotonic()
+    out: Dict[str, Dict] = {p: {} for p in POLICIES}
+    for policy in POLICIES:
+        for rate in rates:
+            reqs = workload_b(arrival_rate=rate, n_requests=700, seed=3)
+            out[policy][rate] = _run(policy, reqs, WB_MODELS, n_inst=4)
+    _dump("fig12_13", out)
+    mid = rates[1]
+    thr = {p: out[p][mid]["throughput_rps"] for p in POLICIES}
+    slo = {p: out[p][mid]["slo_attainment"] for p in POLICIES}
+    return [
+        _row("fig12_multi_model_throughput", time.monotonic() - t0,
+             f"qlm/vllm={thr['qlm']/max(thr['vllm'],1e-9):.2f}x (paper ~3-4x)"),
+        _row("fig13_multi_model_slo", 0,
+             f"qlm={slo['qlm']:.2f} vllm={slo['vllm']:.2f} "
+             f"edf={slo['edf']:.2f} shepherd={slo['shepherd']:.2f}"),
+    ]
+
+
+def fig14_multi_model_ablation(rate=25) -> List:
+    """2 instances < 5 models forces real model multiplexing, so the swap
+    LSO contribution is visible (the paper's dominant term in Fig. 14)."""
+    t0 = time.monotonic()
+    variants = {
+        "qlm_full": {},
+        "no_eviction": {"uses_eviction": False},
+        "no_swap_planning": {"plans_swaps": False},
+        "no_reordering": {"reorders": False},
+    }
+    out = {}
+    for name, override in variants.items():
+        reqs = workload_b(arrival_rate=rate, n_requests=900, seed=4)
+        kw = {"traits_override": override} if override else {}
+        out[name] = _run("qlm", reqs, WB_MODELS, n_inst=2, **kw)
+    _dump("fig14", out)
+    return [_row("fig14_lso_ablation_multi", time.monotonic() - t0,
+                 " ".join(f"{k}:slo={v['slo_attainment']:.2f},thr={v['throughput_rps']:.1f}"
+                          for k, v in out.items()))]
+
+
+def fig15_hardware_heterogeneity(rate=40) -> List:
+    """A10/A100 mixes: QLM's RWT-weighted placement vs round-robin (random)."""
+    t0 = time.monotonic()
+    out = {}
+    for frac_a10 in (0.0, 0.25, 0.5):
+        n_inst = 4
+        n_a10 = int(n_inst * frac_a10)
+        profs = ([profiles_for("a10", ["vicuna-13b"])] * n_a10 +
+                 [profiles_for("a100", ["vicuna-13b"])] * (n_inst - n_a10))
+        res = {}
+        for policy in ("qlm", "vllm"):  # vllm spreads least-loaded≈round-robin
+            reqs = workload_a(arrival_rate=rate, n_requests=600, seed=5)
+            sim = ClusterSimulator(profs, policy)
+            res[policy] = sim.run(reqs)
+        out[f"a10_{frac_a10}"] = res
+    _dump("fig15", out)
+    d = {k: v["qlm"]["throughput_rps"] / max(v["vllm"]["throughput_rps"], 1e-9)
+         for k, v in out.items()}
+    return [_row("fig15_heterogeneity", time.monotonic() - t0,
+                 " ".join(f"{k}:qlm/rr={v:.2f}x" for k, v in d.items()))]
+
+
+def fig16_mega_prompt(rate=3) -> List:
+    """A10-class instances (7k-token KV) so a 4k-token mega prompt really
+    does occupy most of the device — the paper's HOL-blocking setup."""
+    t0 = time.monotonic()
+    out = {}
+    for frac in (0.0, 0.1, 0.3):
+        res = {}
+        for policy in ("qlm", "vllm"):
+            reqs = workload_c(arrival_rate=rate, n_requests=600, seed=6,
+                              mega_fraction=frac)
+            res[policy] = _run(policy, reqs, ["vicuna-13b"], n_inst=4,
+                               device="a10")
+        out[f"mega_{frac}"] = res
+    _dump("fig16", out)
+    d = {k: v["qlm"]["slo_attainment"] - v["vllm"]["slo_attainment"]
+         for k, v in out.items()}
+    return [_row("fig16_mega_prompt", time.monotonic() - t0,
+                 " ".join(f"{k}:+{v:.2f}slo" for k, v in d.items()))]
+
+
+def fig17_queue_size() -> List:
+    """SLO attainment vs queue size (arrival-rate sweep creates the queue)
+    + the §8.3 burstiness axis (gamma interarrivals, CV=4)."""
+    t0 = time.monotonic()
+    out: Dict[str, Dict] = {p: {} for p in POLICIES}
+    for policy in POLICIES:
+        for rate in (5, 20, 60, 150):
+            reqs = workload_b(arrival_rate=rate, n_requests=500, seed=7)
+            out[policy][rate] = _run(policy, reqs, WB_MODELS, n_inst=4)
+    # bursty variant at the mid rate
+    from repro.data.workload import WorkloadSpec, generate
+    bursty = {}
+    for policy in ("vllm", "qlm"):
+        reqs = generate(WorkloadSpec(
+            name="W_B_bursty", n_requests=500, seed=7, arrival_rate=20,
+            burstiness_cv=4.0,
+            mix=[("batch1", "mistral-7b-ft", 0.25),
+                 ("batch1", "llama-70b-ft1", 0.25),
+                 ("batch2", "vicuna-13b-ft", 0.20),
+                 ("batch2", "llama-70b-ft2", 0.15),
+                 ("batch2", "vicuna-13b-ft2", 0.15)]))
+        bursty[policy] = _run(policy, reqs, WB_MODELS, n_inst=4)
+    out["bursty_cv4"] = bursty
+    _dump("fig17", out)
+    # the paper's claim: gap widens with queue size and persists under burst
+    gap_small = out["qlm"][5]["slo_attainment"] - out["vllm"][5]["slo_attainment"]
+    gap_big = out["qlm"][150]["slo_attainment"] - out["vllm"][150]["slo_attainment"]
+    gap_burst = bursty["qlm"]["slo_attainment"] - bursty["vllm"]["slo_attainment"]
+    return [_row("fig17_queue_size", time.monotonic() - t0,
+                 f"slo_gap@rate5={gap_small:.2f} slo_gap@rate150={gap_big:.2f} "
+                 f"slo_gap@bursty_cv4={gap_burst:.2f}")]
+
+
+def fig18_rwt_accuracy() -> List:
+    """R² of RWT waiting-time ESTIMATES (Eq. 2: q·μ_o/Θ — the estimator
+    only knows the fitted output distribution, not true lengths) vs the
+    simulated ground truth, per model, for growing queue sizes.
+
+    The paper's own finding reproduces: conservative (low R²) for short
+    queues where the CLT hasn't kicked in, →0.99 for long queues.
+    """
+    t0 = time.monotonic()
+    out = {}
+    for model in ("mistral-7b", "vicuna-13b", "llama-70b"):
+        hw = DEVICE_PROFILES["a100"][model]
+        reqs = workload_a(arrival_rate=3000, n_requests=1200, seed=8, model=model)
+        for r in reqs:
+            r.slo = 1e9
+        # paper §6 "Hardware Profiling": ONE saturated batch run measures Θ
+        # (tokens/s) — that's the only per-(model, device) calibration.
+        prof_reqs = workload_a(arrival_rate=3000, n_requests=700, seed=99,
+                               model=model)
+        for r in prof_reqs:
+            r.slo = 1e9
+        prof_sim = ClusterSimulator([profiles_for("a100", [model])], "vllm",
+                                    max_batch_requests=256)
+        prof_sim.run(prof_reqs)
+        pstats = prof_sim.instances[0].stats
+        d_measured = pstats.busy_time / max(pstats.iterations, 1)  # d·ε
+
+        profs = [profiles_for("a100", [model])]
+        sim = ClusterSimulator(profs, "vllm", max_batch_requests=256)
+        sim.run(reqs)
+        waits = np.array([r.ttft() for r in reqs])
+        wl = WorkloadProfile.fit([r.prompt_len for r in reqs],
+                                 [r.true_output_tokens for r in reqs])
+        b_eff = min(hw.batch_size(wl), 256.0)
+        theta = b_eff / d_measured  # Eq. 15 with profiled d·ε
+        # queue position = requests AHEAD IN THE WAITING QUEUE (the running
+        # batch is not "the queue"; Eq. 2 counts requests ahead in queue)
+        qpos = np.maximum(0.0, np.arange(len(reqs), dtype=float) - b_eff)
+        preds = qpos * wl.mu_output / theta          # Eq. 2 with Eq. 3 mean
+        queued = np.flatnonzero(qpos > 0)
+        r2_by_q = {q: RWTEstimator.r_squared(preds[queued[:q]], waits[queued[:q]])
+                   for q in (30, 100, 400, len(queued))}
+        out[model] = r2_by_q
+    _dump("fig18", out)
+    final = {m: v[max(v)] for m, v in out.items()}
+    small = {m: v[30] for m, v in out.items()}
+    return [_row("fig18_rwt_accuracy", time.monotonic() - t0,
+                 " ".join(f"{m}:R2={v:.3f}" for m, v in final.items()) +
+                 f" | small-queue min R2={min(small.values()):.2f}")]
+
+
+def fig19_group_size_delta(rate=25) -> List:
+    """δ trade-off: smaller groups => finer decisions, more overhead."""
+    t0 = time.monotonic()
+    out = {}
+    for delta in (1, 4, 16):
+        reqs = workload_b(arrival_rate=rate, n_requests=600, seed=9)
+        cfg = QLMConfig(avg_batch_size=32, delta=float(delta))
+        t1 = time.monotonic()
+        m = _run("qlm", reqs, WB_MODELS, n_inst=4, qlm_cfg=cfg)
+        m["scheduler_wall_s"] = time.monotonic() - t1
+        out[delta] = m
+    _dump("fig19", out)
+    return [_row("fig19_group_size_delta", time.monotonic() - t0,
+                 " ".join(f"d{d}:slo={v['slo_attainment']:.2f}"
+                          for d, v in out.items()))]
+
+
+def fig20_solver_overhead() -> List:
+    """Solver wall time vs queue size (groups scale with queue/δ)."""
+    import random
+    from repro.core.solver import GroupSpec, InstanceSpec, solve
+    t0 = time.monotonic()
+    rng = random.Random(0)
+    out = {}
+    for n_requests in (1000, 10_000, 100_000, 400_000):
+        group_size = 128  # avg_batch 32 × δ 4
+        n_groups = max(1, n_requests // group_size)
+        instances = [InstanceSpec(i, "A", {"A": 2.0, "B": 3.0})
+                     for i in range(8)]
+        groups = [GroupSpec(j, rng.choice(["A", "B"]), rng.uniform(10, 3600),
+                            {i: rng.uniform(1, 30) for i in range(8)})
+                  for j in range(n_groups)]
+        t1 = time.monotonic()
+        solve(groups, instances)
+        dt = time.monotonic() - t1
+        out[n_requests] = {"n_groups": n_groups, "solve_s": dt,
+                           "ms_per_request": dt / n_requests * 1e3}
+    _dump("fig20", out)
+    worst = max(v["ms_per_request"] for v in out.values())
+    return [_row("fig20_solver_overhead", time.monotonic() - t0,
+                 f"max_ms_per_request={worst:.3f} (paper budget: 5ms)")]
+
+
+def fig1_gpus_required() -> List:
+    """Fig. 1 (right): instances required to hold a >=90%-attainment SLO,
+    single- and multi-model, per system.  QLM's multiplexing needs the
+    fewest (the paper's 2-vs-4-GPU example)."""
+    from repro.core.autoscale import find_min_instances
+    from repro.data.workload import WorkloadSpec, generate
+    t0 = time.monotonic()
+    models = ["mistral-7b", "vicuna-13b"]
+
+    def mk():  # Fig. 2 scenario: 2 models x (interactive + batch), tight KV
+        return generate(WorkloadSpec(
+            name="fig1", n_requests=400, seed=21, arrival_rate=4,
+            mix=[("interactive", "mistral-7b", 0.2),
+                 ("batch1", "mistral-7b", 0.15), ("batch2", "mistral-7b", 0.15),
+                 ("interactive", "vicuna-13b", 0.2),
+                 ("batch1", "vicuna-13b", 0.15), ("batch2", "vicuna-13b", 0.15)]))
+
+    out = {}
+    for policy in ("vllm", "shepherd", "qlm"):
+        def run_with_n(n):
+            return _run(policy, mk(), models, n_inst=n, device="a10")
+        res = find_min_instances(run_with_n, slo_target=0.90, lo=1, hi=8)
+        out[policy] = res["min_instances"]
+    _dump("fig1", out)
+    return [_row("fig1_gpus_required", time.monotonic() - t0,
+                 " ".join(f"{p}={v if v is not None else '>8'}"
+                          for p, v in out.items()) +
+                 " (paper Fig.2: QLM 2 vs baseline 4)")]
+
+
+ALL_FIGURES = [
+    fig1_gpus_required,
+    fig3_waiting_time_linearity,
+    fig9_10_single_model,
+    fig11_single_model_ablation,
+    fig12_13_multi_model,
+    fig14_multi_model_ablation,
+    fig15_hardware_heterogeneity,
+    fig16_mega_prompt,
+    fig17_queue_size,
+    fig18_rwt_accuracy,
+    fig19_group_size_delta,
+    fig20_solver_overhead,
+]

@@ -1,0 +1,51 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Raw per-figure results land
+in ``experiments/bench/*.json``; the roofline table (from the dry-run
+artifacts, if present) in ``experiments/roofline_table.json``.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig12]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="substring filter on figure name")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import figures, roofline
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for fn in figures.ALL_FIGURES:
+        if args.only and args.only not in fn.__name__:
+            continue
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us},{derived}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{fn.__name__},ERROR,{type(e).__name__}: {e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+
+    if not args.skip_roofline and (args.only is None or "roofline" in args.only):
+        try:
+            for name, us, derived in roofline.main():
+                print(f"{name},{us},{derived}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"roofline,ERROR,{type(e).__name__}: {e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+
+    if failures:
+        raise SystemExit(f"{failures} benchmarks failed")
+
+
+if __name__ == "__main__":
+    main()

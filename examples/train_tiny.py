@@ -1,0 +1,38 @@
+"""End-to-end training driver (deliverable b): train a ~100M-param model
+for a few hundred steps on the synthetic structured LM stream and verify
+the loss drops.  On TPU the same script scales via --full + the production
+mesh; on CPU we default to a ~100M reduced config.
+
+  PYTHONPATH=src python examples/train_tiny.py [--steps 300] [--small]
+"""
+import argparse
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--small", action="store_true",
+                    help="tiny config for a fast functional check")
+    args = ap.parse_args()
+
+    if args.small:
+        argv = ["--arch", args.arch, "--steps", str(args.steps),
+                "--batch", "8", "--seq", "64", "--layers", "2",
+                "--d-model", "128", "--lr", "3e-3"]
+    else:
+        # ~100M params: 8 layers x d_model 768 + 512-vocab head
+        argv = ["--arch", args.arch, "--steps", str(args.steps),
+                "--batch", "8", "--seq", "128", "--layers", "8",
+                "--d-model", "768", "--lr", "1e-3",
+                "--checkpoint", "/tmp/repro_train_tiny_ckpt"]
+    result = train_main(argv)
+    assert result["last_loss"] < result["first_loss"], \
+        "training must reduce the loss"
+    print("OK: loss decreased")
+
+
+if __name__ == "__main__":
+    main()

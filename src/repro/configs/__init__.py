@@ -1,0 +1,33 @@
+from repro.configs.base import (
+    INPUT_SHAPES,
+    INPUT_SHAPES_BY_NAME,
+    EncoderConfig,
+    InputShape,
+    MoEConfig,
+    ModelConfig,
+    SSMConfig,
+    VisionConfig,
+)
+from repro.configs.registry import (
+    ARCHITECTURES,
+    applicable_pairs,
+    get_arch,
+    get_shape,
+    shape_applicable,
+)
+
+__all__ = [
+    "INPUT_SHAPES",
+    "INPUT_SHAPES_BY_NAME",
+    "EncoderConfig",
+    "InputShape",
+    "MoEConfig",
+    "ModelConfig",
+    "SSMConfig",
+    "VisionConfig",
+    "ARCHITECTURES",
+    "applicable_pairs",
+    "get_arch",
+    "get_shape",
+    "shape_applicable",
+]

@@ -1,0 +1,68 @@
+"""Scale-up & admission control (paper §9 / §8.2 / Fig. 1-right).
+
+When the global scheduler cannot find a feasible ordering the paper's
+options are (a) scale up serving instances, (b) EDF fallback (implemented
+in the scheduler), (c) admission control.  This module implements (a) and
+(c):
+
+* ``find_min_instances`` — the Fig. 1 (right) experiment: the smallest
+  cluster that keeps SLO attainment above a target, per policy.  QLM's
+  better multiplexing needs fewer devices than systems that split
+  batch/interactive or per-model (the paper's 2-vs-4-GPU example).
+* ``AdmissionController`` — drop/reject requests once the estimated queue
+  drain exceeds a bound (§9 option (c)).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.core.request import Request
+from repro.core.rwt_estimator import HardwareProfile, RWTEstimator, WorkloadProfile
+
+
+def find_min_instances(run_with_n: Callable[[int], Dict[str, float]],
+                       *, slo_target: float = 0.99,
+                       lo: int = 1, hi: int = 16) -> Dict[str, object]:
+    """Binary search the smallest instance count meeting ``slo_target``.
+
+    ``run_with_n(n)`` runs the workload on an n-instance cluster and
+    returns the metrics dict (ClusterSimulator.run).
+    """
+    results: Dict[int, float] = {}
+
+    def ok(n: int) -> bool:
+        if n not in results:
+            results[n] = run_with_n(n)["slo_attainment"]
+        return results[n] >= slo_target
+
+    if not ok(hi):
+        return {"min_instances": None, "attainment_by_n": results}
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if ok(mid):
+            hi = mid
+        else:
+            lo = mid + 1
+    return {"min_instances": hi, "attainment_by_n": results}
+
+
+@dataclasses.dataclass
+class AdmissionController:
+    """§9(c): reject incoming requests when the RWT-estimated queue drain
+    already exceeds ``max_drain_s`` (rate limiting keeps the queue bounded
+    so admitted requests can still meet SLOs)."""
+    estimator: RWTEstimator
+    hw: HardwareProfile
+    max_drain_s: float
+    rejected: List[Request] = dataclasses.field(default_factory=list)
+
+    def admit(self, req: Request, queue_pending_requests: int,
+              wl: Optional[WorkloadProfile] = None) -> bool:
+        wl = wl or WorkloadProfile(req.prompt_len, 1.0,
+                                   float(req.max_new_tokens), 1.0)
+        est = self.estimator.waiting_time(queue_pending_requests, wl, self.hw)
+        if est.conservative(self.estimator.z) > self.max_drain_s:
+            self.rejected.append(req)
+            return False
+        return True

@@ -1,0 +1,80 @@
+"""QLM agent: translates virtual-queue order into LSO actions (paper §5).
+
+One agent per LLM serving instance.  The agent is a pure actuator — all
+intelligence lives in the global scheduler's VQ ordering:
+
+  * Request pulling  — engine.pull_source bound to the VQ head group (FCFS
+    within the group);
+  * Request eviction — when the head group changes, running requests from
+    other groups are evicted (KV snapshotted to host) to un-block HOL;
+  * Model swapping   — when the head group's model differs from the loaded
+    one, flush + swap;
+  * Load balancing   — implicit: each instance only pulls from its own VQ.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.core.request import Request
+from repro.core.virtual_queue import VirtualQueue
+from repro.serving.engine import ContinuousBatchingEngine
+
+
+class QLMAgent:
+    def __init__(self, engine: ContinuousBatchingEngine, vq: VirtualQueue,
+                 model_registry: Dict[str, Tuple[object, object]],
+                 *, enable_eviction: bool = True, enable_swap: bool = True):
+        """model_registry: name -> (Model, params)."""
+        self.engine = engine
+        self.vq = vq
+        self.registry = model_registry
+        self.enable_eviction = enable_eviction
+        self.enable_swap = enable_swap
+        self._last_head = None  # eviction fires on head-group CHANGE (§5)
+        engine.pull_source = self._pull
+
+    # -- request pulling LSO ------------------------------------------------
+    def _pull(self) -> Optional[Request]:
+        pushed = self.engine.take_pushback()
+        if pushed is not None:
+            pushed._in_flight = False
+        req = self.vq.next_request(self.engine.model_name)
+        if req is None:
+            return None
+        req._in_flight = True
+        return req
+
+    # -- eviction + swap LSOs -------------------------------------------------
+    def sync(self) -> None:
+        """Reconcile engine state with the (possibly re-ordered) VQ."""
+        head = self.vq.head_group()
+        if head is None:
+            return
+        # model swapping: head group's model must be resident
+        if self.enable_swap and head.model != self.engine.model_name:
+            model, params = self.registry[head.model]
+            evicted = self.engine.swap_model(model, params, head.model)
+            for r in evicted:
+                r._in_flight = False
+        # request eviction: fires when the global scheduler moved a NEW
+        # group to the head (§5) and its requests are blocked by other
+        # groups' running requests (HOL un-blocking)
+        head_changed = head.group_id != self._last_head
+        self._last_head = head.group_id
+        if self.enable_eviction and head_changed:
+            head_pending = [r for r in head.pending()
+                            if not getattr(r, "_in_flight", False)]
+            if head_pending and not any(
+                    self.engine.can_admit(r) for r in head_pending):
+                for slot in list(self.engine.active_slots()):
+                    running = self.engine.slots[slot]
+                    if running is not None and running.group_id != head.group_id:
+                        r = self.engine.evict_slot(slot)
+                        r._in_flight = False
+                        if self.engine.can_admit(head_pending[0]):
+                            break
+
+    def run_iteration(self):
+        """sync + one engine step (the serve loop quantum)."""
+        self.sync()
+        return self.engine.step()

@@ -1,0 +1,125 @@
+"""QLM controller: global queue + group formation + violation-triggered
+global scheduling (paper §3 lifecycle).
+
+Works against either the real engine cluster (``repro.serving`` +
+``core.lso.QLMAgent``) or the discrete-event simulator (``repro.sim``);
+both expose instances as ``core.global_scheduler.InstanceInfo``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, List, Optional, Sequence
+
+from repro.core.global_scheduler import GlobalScheduler, InstanceInfo
+from repro.core.request import Request
+from repro.core.request_group import (RequestGroup, classify_into_groups,
+                                      create_request_groups)
+from repro.core.rwt_estimator import RWTEstimator
+
+
+@dataclasses.dataclass
+class QLMConfig:
+    avg_batch_size: float = 32.0
+    delta: float = 4.0            # request-group size multiple (§8.3: δ=4)
+    z_conservative: float = 1.0   # RWT tail factor
+    reschedule_on_arrival: bool = True
+    # min sim-seconds between solver invocations: the paper runs the global
+    # scheduler OFF the critical path ("overheads can be hidden", §8.3), so
+    # back-to-back arrivals share one reordering.
+    reschedule_cooldown: float = 2.0
+
+
+class QLMController:
+    def __init__(self, instances: Sequence[InstanceInfo],
+                 cfg: Optional[QLMConfig] = None, seed: int = 0):
+        self.cfg = cfg or QLMConfig()
+        self.instances = list(instances)
+        self.estimator = RWTEstimator(self.cfg.z_conservative)
+        self.scheduler = GlobalScheduler(self.estimator, seed=seed)
+        # the global queue: single-replica request store (RabbitMQ stand-in,
+        # §4 Fault Tolerance) — virtual queues only hold group pointers.
+        self.global_queue: List[Request] = []
+        self.groups: List[RequestGroup] = []
+        self.finished: List[Request] = []
+        self._last_reschedule = -math.inf
+
+    @property
+    def max_group(self) -> int:
+        return max(1, int(self.cfg.avg_batch_size * self.cfg.delta))
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request, now: float) -> None:
+        """API-gateway entry: enqueue, classify into a group, reschedule if
+        the RWT estimator predicts a violation."""
+        self.global_queue.append(req)
+        g = classify_into_groups(req, self.groups, max_group=self.max_group)
+        if g is None:
+            g = RequestGroup(model=req.model, slo=req.slo)
+            g.add(req)
+            self.groups.append(g)
+            self._place_new_group(g, now)
+        if self.cfg.reschedule_on_arrival and \
+                now - self._last_reschedule >= self.cfg.reschedule_cooldown and \
+                self.scheduler.predict_violation(self.instances, now):
+            self.reschedule(now)
+
+    def submit_batch(self, requests: Sequence[Request], now: float) -> None:
+        """Bulk arrival: form groups with Algorithm 1 k-means, then solve."""
+        self.global_queue.extend(requests)
+        new_groups = create_request_groups(
+            requests, avg_batch_size=self.cfg.avg_batch_size,
+            delta=self.cfg.delta)
+        self.groups.extend(new_groups)
+        self.reschedule(now)
+
+    def _place_new_group(self, g: RequestGroup, now: float) -> None:
+        """Cheap placement for a singleton group (full solve happens on
+        violation): minimize the RWT-estimated drain of (queue + group) —
+        heterogeneity-aware (Design Principle #3: an A10 absorbs
+        proportionally less work than an A100), unlike a raw request count.
+        """
+        candidates = [i for i in self.instances if g.model in i.hw_by_model]
+        if not candidates:
+            raise ValueError(f"no instance can serve model {g.model}")
+        wl = g.workload_profile()
+
+        def drain(i):
+            theta = i.hw(g.model).throughput(wl)
+            backlog = i.virtual_queue.pending_requests() + len(g.pending())
+            swap = 0.0 if i.current_model in (None, g.model) \
+                else i.hw(g.model).swap_time
+            return backlog * wl.mu_output / theta + swap
+
+        inst = min(candidates, key=drain)
+        inst.virtual_queue.groups.append(g)
+
+    # ------------------------------------------------------------------
+    def reschedule(self, now: float):
+        self.gc_groups()
+        self._last_reschedule = now
+        return self.scheduler.schedule(self.groups, self.instances, now)
+
+    def tick(self, now: float) -> bool:
+        """Periodic violation check (returns True if it rescheduled)."""
+        if self.scheduler.predict_violation(self.instances, now):
+            self.reschedule(now)
+            return True
+        return False
+
+    def gc_groups(self) -> None:
+        self.groups = [g for g in self.groups if not g.done()]
+        still = []
+        for r in self.global_queue:
+            (self.finished if r.finished() else still).append(r)
+        self.global_queue = still
+
+    # ------------------------------------------------------------------
+    def all_requests(self) -> List[Request]:
+        return self.finished + self.global_queue
+
+    def slo_attainment(self) -> float:
+        done = [r for r in self.all_requests() if r.ttft() is not None]
+        if not done:
+            return 1.0
+        return sum(1 for r in done if r.slo_met()) / len(done)

@@ -1,0 +1,89 @@
+"""Request / SLO model (paper §2.3 Definitions 2.1–2.3).
+
+A request = prompt tokens + metadata (model type, SLO).  The SLO is on
+p99 time-to-first-token (TTFT).  Paper workload classes (§8):
+Interactive 20 s, Batch-1 60 s, Batch-2 3600 s.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, List, Optional
+
+_req_counter = itertools.count()
+
+# paper §8 SLO classes (seconds, p99 TTFT)
+SLO_INTERACTIVE = 20.0
+SLO_BATCH1 = 60.0
+SLO_BATCH2 = 3600.0
+
+SLO_CLASSES = {
+    "interactive": SLO_INTERACTIVE,
+    "batch1": SLO_BATCH1,
+    "batch2": SLO_BATCH2,
+}
+
+
+@dataclasses.dataclass
+class Request:
+    prompt_tokens: Any                 # list[int] / np.ndarray
+    model: str                         # model type the request targets
+    slo: float                         # TTFT SLO in seconds
+    arrival_time: float = 0.0
+    max_new_tokens: int = 128
+    req_id: int = dataclasses.field(default_factory=lambda: next(_req_counter))
+    slo_class: str = ""
+    # strict priority (§9): lower = more urgent; 0 = default
+    priority: int = 0
+
+    # lifecycle (filled by the runtime / simulator)
+    group_id: Optional[int] = None
+    first_token_time: Optional[float] = None
+    completion_time: Optional[float] = None
+    output_tokens: List[int] = dataclasses.field(default_factory=list)
+    n_evictions: int = 0
+    # eviction snapshot handle (host-side KV/state copy), engine-internal
+    snapshot: Any = None
+    generated: int = 0
+    # modality extras (VLM patch embeds / audio frame embeds), passed to prefill
+    extras: Any = None
+    # ground-truth output length (simulator only; unknown to the scheduler)
+    true_output_tokens: Optional[int] = None
+    # scheduling flag: currently in a running batch
+    _in_flight: bool = False
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt_tokens)
+
+    @property
+    def deadline(self) -> float:
+        return self.arrival_time + self.slo
+
+    def ttft(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival_time
+
+    def slo_met(self) -> Optional[bool]:
+        t = self.ttft()
+        return None if t is None else (t <= self.slo)
+
+    def itl(self) -> Optional[float]:
+        """Mean inter-token latency (§9 'Can SLOs be defined on ITL?' —
+        QLM tracks it so an Andes-style ITL guard can consume it)."""
+        if self.completion_time is None or self.first_token_time is None:
+            return None
+        if self.generated <= 1:
+            return 0.0
+        return (self.completion_time - self.first_token_time) / (self.generated - 1)
+
+    def finished(self) -> bool:
+        return self.completion_time is not None
+
+
+def make_request(prompt_tokens, model: str, slo_class: str,
+                 arrival_time: float = 0.0, max_new_tokens: int = 128) -> Request:
+    return Request(prompt_tokens=prompt_tokens, model=model,
+                   slo=SLO_CLASSES[slo_class], arrival_time=arrival_time,
+                   max_new_tokens=max_new_tokens, slo_class=slo_class)

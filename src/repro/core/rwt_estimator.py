@@ -1,0 +1,128 @@
+"""Request Waiting Time (RWT) Estimator — paper §6 and Appendix A.1.
+
+    C_q = W_q + P + D_q                                  (Eq. 1)
+    W_q = Σ_{i<q} O_i / Θ                                (Eq. 2)
+    Σ O_i ~ N((q−1)μ_o, (q−1)σ_o²)                       (Eq. 3, CLT)
+    D_q = O_max · ε · d                                  (Eq. 4, conservative)
+    C   = max_q C_q                                      (Eq. 5)
+
+with the Appendix A.1 throughput model:
+
+    Θ = B / (d · ε)          (Eq. 15)
+    B ≈ GPU / E[I_i + O_i]   (Eq. 16)
+
+Profiling inputs (paper "Offline Profiling"): a WorkloadProfile (token
+distribution fitted from request history per request group) and a
+HardwareProfile (P, d, ε, GPU token capacity, swap time S — one batch run
+per (model, device) combination; see ``serving.engine.profile`` /
+``sim.profiles``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadProfile:
+    """Input/output token distribution for one request group."""
+    mu_input: float
+    sigma_input: float
+    mu_output: float
+    sigma_output: float
+
+    @staticmethod
+    def fit(input_lens: Sequence[float], output_lens: Sequence[float]) -> "WorkloadProfile":
+        import numpy as np
+        i = np.asarray(input_lens, float)
+        o = np.asarray(output_lens, float)
+        return WorkloadProfile(float(i.mean()), float(i.std() + 1e-9),
+                               float(o.mean()), float(o.std() + 1e-9))
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareProfile:
+    """Per (model, device-type) constants from one profiling batch run."""
+    prefill_time: float          # P seconds (≈ constant per model, §6)
+    decode_per_token: float      # d seconds per decode iteration
+    inefficiency: float          # ε ≥ 1, continuous-batching preemption factor
+    token_capacity: int          # GPU — total KV tokens the device holds
+    swap_time: float = 0.0       # S — model load time onto this device
+    model_max_tokens: int = 2048  # decode bound for Eq. 4
+
+    def batch_size(self, wl: WorkloadProfile) -> float:
+        """Eq. 16: B ≈ GPU / E[I + O]."""
+        return self.token_capacity / max(wl.mu_input + wl.mu_output, 1.0)
+
+    def throughput(self, wl: WorkloadProfile) -> float:
+        """Eq. 15: Θ = B / (d · ε) output tokens per second."""
+        return self.batch_size(wl) / (self.decode_per_token * self.inefficiency)
+
+
+@dataclasses.dataclass(frozen=True)
+class WaitEstimate:
+    mean: float
+    std: float
+
+    def conservative(self, z: float = 1.0) -> float:
+        return self.mean + z * self.std
+
+
+class RWTEstimator:
+    """Stateless estimator; all state arrives via the profiles."""
+
+    def __init__(self, z_conservative: float = 1.0):
+        self.z = z_conservative
+
+    # -- Eq. 2/3: waiting time for a request at queue position q ----------
+    def waiting_time(self, queue_position: int, wl: WorkloadProfile,
+                     hw: HardwareProfile) -> WaitEstimate:
+        q_ahead = max(queue_position, 0)
+        theta = hw.throughput(wl)
+        mean = q_ahead * wl.mu_output / theta
+        std = math.sqrt(q_ahead) * wl.sigma_output / theta
+        return WaitEstimate(mean, std)
+
+    # -- Eq. 4: conservative decode bound ---------------------------------
+    def decode_time(self, hw: HardwareProfile,
+                    max_output_tokens: Optional[int] = None) -> float:
+        o = max_output_tokens if max_output_tokens is not None else hw.model_max_tokens
+        return o * hw.inefficiency * hw.decode_per_token
+
+    # -- Eq. 1/5: completion bound for a request / group ------------------
+    def request_completion(self, queue_position: int, wl: WorkloadProfile,
+                           hw: HardwareProfile,
+                           max_output_tokens: Optional[int] = None) -> WaitEstimate:
+        w = self.waiting_time(queue_position, wl, hw)
+        extra = hw.prefill_time + self.decode_time(hw, max_output_tokens)
+        return WaitEstimate(w.mean + extra, w.std)
+
+    def group_drain_time(self, n_requests: int, wl: WorkloadProfile,
+                         hw: HardwareProfile) -> WaitEstimate:
+        """Eq. 5 over a whole request group: the LAST request's completion.
+
+        The group's total output tokens ~ N(nμ_o, nσ_o²); drain = tokens/Θ,
+        plus the conservative tail decode for the final request.
+        """
+        theta = hw.throughput(wl)
+        mean = n_requests * wl.mu_output / theta
+        std = math.sqrt(max(n_requests, 1)) * wl.sigma_output / theta
+        return WaitEstimate(mean + hw.prefill_time, std)
+
+    def group_first_token_time(self, n_ahead_tokens: float,
+                               wl: WorkloadProfile, hw: HardwareProfile) -> float:
+        """TTFT for a group whose predecessors hold ``n_ahead_tokens``
+        pending output tokens (used by the violation monitor)."""
+        theta = hw.throughput(wl)
+        return n_ahead_tokens / theta + hw.prefill_time
+
+    # -- accuracy metric (Fig. 18) ----------------------------------------
+    @staticmethod
+    def r_squared(predicted: Sequence[float], actual: Sequence[float]) -> float:
+        import numpy as np
+        p = np.asarray(predicted, float)
+        a = np.asarray(actual, float)
+        ss_res = float(np.sum((a - p) ** 2))
+        ss_tot = float(np.sum((a - a.mean()) ** 2))
+        return 1.0 - ss_res / max(ss_tot, 1e-12)

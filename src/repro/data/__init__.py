@@ -1,0 +1,5 @@
+from repro.data.sharegpt_synth import MEGA_PROMPT, SHAREGPT, sample_lengths
+from repro.data.workload import WorkloadSpec, generate, workload_a, workload_b, workload_c
+
+__all__ = ["SHAREGPT", "MEGA_PROMPT", "sample_lengths", "WorkloadSpec",
+           "generate", "workload_a", "workload_b", "workload_c"]

@@ -1,0 +1,93 @@
+"""Workload generators (paper §8): Poisson arrivals over ShareGPT-like
+token distributions, W_A / W_B / W_C scenario builders.
+
+SLO classes (p99 TTFT): Interactive 20 s, Batch-1 60 s, Batch-2 3600 s.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.request import Request, make_request
+from repro.data.sharegpt_synth import sample_lengths
+
+
+@dataclasses.dataclass
+class WorkloadSpec:
+    name: str
+    n_requests: int = 3500
+    seed: int = 0
+    # class mix: (slo_class, model, fraction)
+    mix: Sequence = ()
+    arrival_rate: float = 50.0        # requests / second (Poisson)
+    burstiness_cv: float = 1.0        # 1.0 = Poisson; >1 via gamma interarrivals
+    mega_fraction: float = 0.0
+
+
+def _arrivals(rng: np.random.Generator, n: int, rate: float, cv: float) -> np.ndarray:
+    if cv <= 1.0:
+        gaps = rng.exponential(1.0 / rate, n)
+    else:  # gamma-distributed interarrivals with CV>1 => bursty
+        shape = 1.0 / (cv * cv)
+        gaps = rng.gamma(shape, 1.0 / (rate * shape), n)
+    return np.cumsum(gaps)
+
+
+def generate(spec: WorkloadSpec) -> List[Request]:
+    rng = np.random.default_rng(spec.seed)
+    n = spec.n_requests
+    ins, outs = sample_lengths(rng, n, spec.mega_fraction)
+    arrivals = _arrivals(rng, n, spec.arrival_rate, spec.burstiness_cv)
+    fractions = np.array([f for (_, _, f) in spec.mix], float)
+    fractions = fractions / fractions.sum()
+    classes = rng.choice(len(spec.mix), size=n, p=fractions)
+    out: List[Request] = []
+    for i in range(n):
+        slo_class, model, _ = spec.mix[classes[i]]
+        prompt = rng.integers(0, 32000, size=int(ins[i])).tolist()
+        r = make_request(prompt, model, slo_class,
+                         arrival_time=float(arrivals[i]),
+                         max_new_tokens=int(outs[i]))
+        r.true_output_tokens = int(outs[i])  # ground truth for the simulator
+        out.append(r)
+    out.sort(key=lambda r: r.arrival_time)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# paper scenarios (§8 Workloads)
+# ---------------------------------------------------------------------------
+
+def workload_a(arrival_rate: float, n_requests: int = 3500, seed: int = 0,
+               model: str = "vicuna-13b") -> List[Request]:
+    """W_A: single-model interactive + batch."""
+    return generate(WorkloadSpec(
+        name="W_A", n_requests=n_requests, seed=seed, arrival_rate=arrival_rate,
+        mix=[("interactive", model, 0.4),
+             ("batch1", model, 0.3),
+             ("batch2", model, 0.3)]))
+
+
+def workload_b(arrival_rate: float, n_requests: int = 3500, seed: int = 0) -> List[Request]:
+    """W_B: multi-model batch.  Batch-1 on two models (mistral-7b-ft,
+    llama-70b-ft1); Batch-2 on three (vicuna-13b-ft, llama-70b-ft2, ...)."""
+    return generate(WorkloadSpec(
+        name="W_B", n_requests=n_requests, seed=seed, arrival_rate=arrival_rate,
+        mix=[("batch1", "mistral-7b-ft", 0.25),
+             ("batch1", "llama-70b-ft1", 0.25),
+             ("batch2", "vicuna-13b-ft", 0.20),
+             ("batch2", "llama-70b-ft2", 0.15),
+             ("batch2", "vicuna-13b-ft2", 0.15)]))
+
+
+def workload_c(arrival_rate: float, n_requests: int = 3500, seed: int = 0,
+               mega_fraction: float = 0.1, model: str = "vicuna-13b") -> List[Request]:
+    """W_C: W_A plus mega prompts (3k–4k total tokens)."""
+    return generate(WorkloadSpec(
+        name="W_C", n_requests=n_requests, seed=seed, arrival_rate=arrival_rate,
+        mega_fraction=mega_fraction,
+        mix=[("interactive", model, 0.4),
+             ("batch1", model, 0.3),
+             ("batch2", model, 0.3)]))

@@ -1,0 +1,140 @@
+"""Logical-axis sharding rules → NamedSharding trees.
+
+Model code annotates every param/cache leaf with logical axis names
+(right-aligned against the leaf's shape — stacked layer/site dims are
+implicitly replicated).  ``ShardingRules`` maps logical names to mesh axes;
+``build_shardings`` applies the map with a divisibility guard: a logical
+axis whose dimension does not divide the mesh axis size is REPLICATED
+instead (GSPMD rejects uneven input shardings) and reported, so the
+roofline pass can see what was dropped.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+MeshAxes = Union[str, Tuple[str, ...], None]
+
+
+# default rules: TP over "model", DP over ("pod","data") for batch
+DEFAULT_RULES: Dict[str, MeshAxes] = {
+    "vocab": "model",
+    "embed": None,
+    "embed_in": None,
+    "ff": "model",
+    "moe_ff": None,
+    "heads_x_dim": "model",
+    "kv_heads_x_dim": "model",
+    "experts": "model",
+    "ssm_inner": "model",
+    "ssm_heads": "model",
+    # data-side axes
+    "batch": ("pod", "data"),
+    "kv_heads": None,
+    "kv_seq": "model",
+}
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    rules: Dict[str, MeshAxes]
+    dropped: List[str] = dataclasses.field(default_factory=list)
+
+    @staticmethod
+    def default(overrides: Optional[Dict[str, MeshAxes]] = None) -> "ShardingRules":
+        r = dict(DEFAULT_RULES)
+        if overrides:
+            r.update(overrides)
+        return ShardingRules(r)
+
+    # ------------------------------------------------------------------
+    def _axis_size(self, mesh: Mesh, axes: MeshAxes) -> int:
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        return size
+
+    def spec_for(self, mesh: Mesh, shape: Tuple[int, ...],
+                 logical: Tuple[Optional[str], ...],
+                 leaf_name: str = "") -> PartitionSpec:
+        """Right-align ``logical`` against ``shape``; drop non-divisible."""
+        ndim = len(shape)
+        pad = ndim - len(logical)
+        assert pad >= 0, (shape, logical, leaf_name)
+        full = (None,) * pad + tuple(logical)
+        entries: List[MeshAxes] = []
+        for dim, name in zip(shape, full):
+            axes = self.rules.get(name) if name is not None else None
+            if axes is None:
+                entries.append(None)
+                continue
+            axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
+            # mesh may not have all axes (single-pod has no "pod")
+            axes_t = tuple(a for a in axes_t if a in mesh.shape)
+            size = 1
+            for a in axes_t:
+                size *= mesh.shape[a]
+            if not axes_t:
+                entries.append(None)
+            elif dim % size != 0:
+                self.dropped.append(f"{leaf_name}:{name}({dim}%{size})")
+                entries.append(None)
+            else:
+                entries.append(axes_t[0] if len(axes_t) == 1 else axes_t)
+        # PartitionSpec can't repeat a mesh axis: keep first occurrence
+        used: set = set()
+        cleaned: List[MeshAxes] = []
+        for e in entries:
+            if e is None:
+                cleaned.append(None)
+                continue
+            et = (e,) if isinstance(e, str) else tuple(e)
+            et = tuple(a for a in et if a not in used)
+            used.update(et)
+            if not et:
+                cleaned.append(None)
+            else:
+                cleaned.append(et[0] if len(et) == 1 else et)
+        return PartitionSpec(*cleaned)
+
+
+def _leaf_name(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def build_shardings(mesh: Mesh, struct_tree, axes_tree, rules: ShardingRules):
+    """struct_tree: pytree of arrays/ShapeDtypeStructs; axes_tree: same
+    treedef with logical-axes tuples at the leaves (axes tuples are leaves).
+    Returns a pytree of NamedSharding."""
+    flat_struct = jax.tree_util.tree_flatten_with_path(struct_tree)[0]
+    # axes_tree leaves are tuples -> use is_leaf
+    flat_axes, axes_def = jax.tree_util.tree_flatten(
+        axes_tree, is_leaf=lambda x: isinstance(x, tuple))
+    struct_leaves, struct_def = jax.tree_util.tree_flatten(struct_tree)
+    assert len(flat_axes) == len(struct_leaves), (
+        f"axes tree ({len(flat_axes)}) != struct tree ({len(struct_leaves)})")
+    shardings = []
+    for (path, leaf), ax in zip(flat_struct, flat_axes):
+        spec = rules.spec_for(mesh, tuple(leaf.shape), ax, _leaf_name(path))
+        shardings.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(struct_def, shardings)
+
+
+def batch_axes_tree(batch_struct: Dict[str, Any]) -> Dict[str, Tuple]:
+    """Data inputs: shard axis 0 (batch) over ("pod","data")."""
+    out = {}
+    for k, v in batch_struct.items():
+        out[k] = ("batch",) + (None,) * (len(v.shape) - 1)
+    return out
+
+
+def replicated(mesh: Mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, PartitionSpec()), tree)

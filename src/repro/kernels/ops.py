@@ -1,0 +1,43 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels execute with ``interpret=True`` (Pallas
+interprets the kernel body in Python) — selected automatically from the
+backend; on TPU the same call sites compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import decode_attention as _decode_attention
+from repro.kernels.flash_attention import flash_attention as _flash_attention
+from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None):
+    interp = _default_interpret() if interpret is None else interpret
+    return _flash_attention(q, k, v, causal=causal, window=window,
+                            block_q=block_q, block_k=block_k, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q, k, v, lengths, *, block_k: int = 256,
+                     interpret: bool | None = None):
+    interp = _default_interpret() if interpret is None else interpret
+    return _decode_attention(q, k, v, lengths, block_k=block_k, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 64, interpret: bool | None = None):
+    interp = _default_interpret() if interpret is None else interpret
+    return _ssd_scan(x, dt, A, Bm, Cm, chunk, interpret=interp)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window=None) -> jax.Array:
+    """q: (B, H, Lq, D); k/v: (B, KVH, Lkv, D)."""
+    B, H, Lq, D = q.shape
+    KVH, Lkv = k.shape[1], k.shape[2]
+    group = H // KVH
+    qg = q.reshape(B, KVH, group, Lq, D).astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, k.astype(jnp.float32)) / math.sqrt(D)
+    q_pos = jnp.arange(Lq)[:, None]
+    k_pos = jnp.arange(Lkv)[None, :]
+    mask = jnp.ones((Lq, Lkv), bool)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window is not None:
+        mask = mask & (k_pos > q_pos - window)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Lq, D).astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         lengths: jax.Array) -> jax.Array:
+    """q: (B, H, D); k/v: (B, KVH, S, D); lengths: (B,)."""
+    B, H, D = q.shape
+    KVH, S = k.shape[1], k.shape[2]
+    group = H // KVH
+    qg = q.reshape(B, KVH, group, D).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bksd->bkgs", qg, k.astype(jnp.float32)) / math.sqrt(D)
+    valid = (jnp.arange(S)[None, :] < lengths[:, None])[:, None, None, :]
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm):
+    """Naive recurrent SSD (same contract as kernels.ssd_scan, zero init)."""
+    from repro.models.ssm import ssd_recurrent_reference
+    y, _ = ssd_recurrent_reference(x, dt, A, Bm, Cm)
+    return y

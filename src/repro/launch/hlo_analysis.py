@@ -1,0 +1,84 @@
+"""HLO text analysis: collective-traffic extraction for the roofline.
+
+``cost_analysis()`` does not report collective bytes, so we parse the
+optimized HLO (``compiled.as_text()``) and sum the result-shape sizes of
+every collective op (all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute).  Result-shape bytes are the right roofline proxy: for
+all-gather it is the full gathered tensor each device materializes; for
+all-reduce the reduced tensor (ring traffic ≈ 2× but we keep the consistent
+lower bound and note it); replica-group size scales per-link traffic and is
+reflected through the ``chips × link_bw`` denominator in the roofline term.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+# result shapes like  f32[16,128]{1,0}  or tuples ( f32[2]{0}, bf16[4,4]{...} )
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OP_LINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+(" + "|".join(COLLECTIVE_OPS) +
+    r")(?:-start|-done)?\(", re.MULTILINE)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_op: Dict[str, int]
+    count_by_op: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_op.values())
+
+    def to_dict(self) -> Dict:
+        return {"bytes_by_op": dict(self.bytes_by_op),
+                "count_by_op": dict(self.count_by_op),
+                "total_bytes": self.total_bytes,
+                "total_count": self.total_count}
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    bytes_by_op: Dict[str, int] = defaultdict(int)
+    count_by_op: Dict[str, int] = defaultdict(int)
+    seen_done = set()
+    for m in _OP_LINE_RE.finditer(hlo_text):
+        result_type, op = m.group(1), m.group(2)
+        # async pairs: count -start only (the -done repeats the shape)
+        line = m.group(0)
+        if f"{op}-done" in line:
+            continue
+        bytes_by_op[op] += _shape_bytes(result_type)
+        count_by_op[op] += 1
+    return CollectiveStats(dict(bytes_by_op), dict(count_by_op))
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

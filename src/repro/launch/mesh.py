@@ -1,0 +1,22 @@
+"""Production meshes.
+
+NOTE: functions, not module-level constants — importing this module must
+never touch jax device state (the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; see ``dryrun.py``).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod (v5e); 2 pods for multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh for CPU tests (requires forced host devices if > 1)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,3 @@
+from repro.models.model_factory import Model, batch_struct, build_model, materialize_batch
+
+__all__ = ["Model", "batch_struct", "build_model", "materialize_batch"]

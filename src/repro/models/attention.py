@@ -1,0 +1,313 @@
+"""GQA attention with full / sliding-window variants and KV-cache paths.
+
+Three entry points per block:
+  * ``attend_train``   — full-sequence causal attention (no cache).
+  * ``attend_prefill`` — like train, but also returns the populated cache.
+  * ``attend_decode``  — one query token against the cache (per-sequence
+                         lengths; continuous batching friendly).
+
+The KV cache is a dict ``{"k": (B, KVH, S, D), "v": (B, KVH, S, D)}`` plus
+per-sequence ``lengths`` carried by the caller.  Sliding-window models keep
+a rolling cache of size ``window`` (write index = pos % window), so the
+``long_500k`` shape materializes only O(window) memory.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def init_attention(key, cfg, dtype=jnp.float32):
+    """cfg: ModelConfig (uses num_heads/num_kv_heads/head_dim/qkv_bias)."""
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": layers.dense_init(kq, d, cfg.num_heads * hd, dtype),
+        "wk": layers.dense_init(kk, d, cfg.num_kv_heads * hd, dtype),
+        "wv": layers.dense_init(kv, d, cfg.num_kv_heads * hd, dtype),
+        "wo": layers.dense_init(ko, cfg.num_heads * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+    return p
+
+
+def _project_qkv(params, cfg, x, positions):
+    """x: (B, L, d) -> q (B, L, H, hd), k/v (B, L, KVH, hd), with RoPE."""
+    B, L, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(B, L, cfg.num_heads, hd)
+    k = k.reshape(B, L, cfg.num_kv_heads, hd)
+    v = v.reshape(B, L, cfg.num_kv_heads, hd)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k = layers.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array,
+          mask: Optional[jax.Array]) -> jax.Array:
+    """q: (B, H, Lq, D), k/v: (B, KVH, Lkv, D), GQA by head-group reshape.
+
+    mask: broadcastable to (B, 1, Lq, Lkv), True = attend.
+
+    Perf note (EXPERIMENTS §Perf H3): operands stay in their storage dtype
+    (bf16 on TPU) and accumulation happens in f32 via
+    ``preferred_element_type`` — materializing ``.astype(f32)`` copies of
+    q/k/v doubled the decode path's HBM traffic (the KV cache is the
+    memory-roofline term for decode).
+    """
+    B, H, Lq, D = q.shape
+    KVH = k.shape[1]
+    group = H // KVH
+    q = q.reshape(B, KVH, group, Lq, D)
+    scale = 1.0 / math.sqrt(D)
+    scores = jnp.einsum("bkgqd,bksd->bkgqs", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        scores = jnp.where(mask[:, :, None] if mask.ndim == 4 else mask,
+                           scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, H, Lq, D).astype(v.dtype)
+
+
+def _sdpa_q_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool, window, chunk: int) -> jax.Array:
+    """Query-chunked exact attention (flash-style memory behaviour at the
+    XLA level, EXPERIMENTS §Perf H1): peak score tensor is
+    (B, KVH, group, chunk, Lkv) instead of (B, KVH, group, L, L).
+    ``lax.map`` serializes chunks, so only one tile is live at a time."""
+    B, H, L, D = q.shape
+    Lkv = k.shape[2]
+    assert L % chunk == 0, (L, chunk)
+    nq = L // chunk
+
+    def one(qi):
+        q_off = qi * chunk
+        qs = jax.lax.dynamic_slice_in_dim(q, q_off, chunk, axis=2)
+        if window is not None:
+            mask = layers.sliding_window_mask(chunk, Lkv, q_off, window)[None, None]
+        elif causal:
+            mask = layers.causal_mask(chunk, Lkv, q_off)[None, None]
+        else:
+            mask = None
+        return _sdpa(qs, k, v, mask)  # (B, H, chunk, D)
+
+    out = jax.lax.map(one, jnp.arange(nq))  # (nq, B, H, chunk, D)
+    return out.transpose(1, 2, 0, 3, 4).reshape(B, H, L, D)
+
+
+def attend_train(params, cfg, x: jax.Array, positions: jax.Array,
+                 *, bidirectional: bool = False) -> jax.Array:
+    """Full-sequence attention. x: (B, L, d)."""
+    B, L, _ = x.shape
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    q = q.transpose(0, 2, 1, 3)  # (B, H, L, D)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    chunk = cfg.train_attn_chunk
+    if cfg.use_pallas_attention and not bidirectional:
+        from repro.kernels import ops as kernel_ops
+        out = kernel_ops.flash_attention(q, k, v, causal=True,
+                                         window=cfg.sliding_window)
+    elif chunk is not None and not bidirectional and L % chunk == 0 and L > chunk:
+        out = _sdpa_q_chunked(q, k, v, causal=True,
+                              window=cfg.sliding_window, chunk=chunk)
+    else:
+        if bidirectional:
+            mask = None
+        elif cfg.sliding_window is not None:
+            mask = layers.sliding_window_mask(L, L, 0, cfg.sliding_window)[None, None]
+        else:
+            mask = layers.causal_mask(L, L, 0)[None, None]
+        out = _sdpa(q, k, v, mask)
+    out = out.transpose(0, 2, 1, 3).reshape(B, L, cfg.num_heads * cfg.resolved_head_dim)
+    return out @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+def cache_len(cfg, max_seq: int) -> int:
+    """Materialized cache length: rolling window for SWA, else max_seq."""
+    if cfg.sliding_window is not None:
+        return min(max_seq, cfg.sliding_window)
+    return max_seq
+
+
+def init_kv_cache(cfg, batch: int, max_seq: int, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    S = cache_len(cfg, max_seq)
+    hd = cfg.resolved_head_dim
+    shape = (batch, cfg.num_kv_heads, S, hd)
+    if cfg.kv_quant:
+        return {"k": jnp.zeros(shape, jnp.int8), "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:-1], dtype),
+                "v_scale": jnp.zeros(shape[:-1], dtype)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (..., D) -> (int8 values, per-row scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(x.dtype)
+
+
+def _dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)).astype(dtype)
+
+
+def attend_prefill(params, cfg, x: jax.Array, positions: jax.Array,
+                   cache: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Causal attention over the prompt AND cache population.
+
+    Assumes prefill starts at position 0 and ``positions`` are
+    [0..L) per sequence (right-padded batches use the padding mask upstream
+    via lengths in decode).  x: (B, L, d).
+    """
+    B, L, _ = x.shape
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    qh = q.transpose(0, 2, 1, 3)
+    kh = k.transpose(0, 2, 1, 3)  # (B, KVH, L, D)
+    vh = v.transpose(0, 2, 1, 3)
+    if cfg.sliding_window is not None:
+        mask = layers.sliding_window_mask(L, L, 0, cfg.sliding_window)[None, None]
+    else:
+        mask = layers.causal_mask(L, L, 0)[None, None]
+    out = _sdpa(qh, kh, vh, mask)
+    out = out.transpose(0, 2, 1, 3).reshape(B, L, cfg.num_heads * cfg.resolved_head_dim)
+
+    S = cache["k"].shape[2]
+    if cfg.sliding_window is not None and L > S:
+        # keep only the last `window` tokens, aligned to rolling index
+        # rolling write index after L tokens is L % S; we store the last S
+        # tokens such that slot (p % S) holds position p.
+        last = jnp.arange(L - S, L)
+        slots = last % S
+        kh_tail = kh[:, :, L - S:, :]
+        vh_tail = vh[:, :, L - S:, :]
+        if cfg.kv_quant:
+            kq, ks = _quantize_kv(kh_tail)
+            vq, vs = _quantize_kv(vh_tail)
+            return out @ params["wo"], {
+                "k": jnp.zeros_like(cache["k"]).at[:, :, slots, :].set(kq),
+                "v": jnp.zeros_like(cache["v"]).at[:, :, slots, :].set(vq),
+                "k_scale": jnp.zeros_like(cache["k_scale"]).at[:, :, slots].set(ks),
+                "v_scale": jnp.zeros_like(cache["v_scale"]).at[:, :, slots].set(vs),
+            }
+        new_k = jnp.zeros_like(cache["k"]).at[:, :, slots, :].set(kh_tail)
+        new_v = jnp.zeros_like(cache["v"]).at[:, :, slots, :].set(vh_tail)
+    else:
+        pad = S - L
+        if cfg.kv_quant:
+            kq, ks = _quantize_kv(kh)
+            vq, vs = _quantize_kv(vh)
+            if pad > 0:
+                kq = jnp.pad(kq, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                vq = jnp.pad(vq, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad)))
+                vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad)))
+            return out @ params["wo"], {"k": kq, "v": vq,
+                                        "k_scale": ks, "v_scale": vs}
+        new_k = jnp.pad(kh, ((0, 0), (0, 0), (0, pad), (0, 0))) if pad > 0 else kh
+        new_v = jnp.pad(vh, ((0, 0), (0, 0), (0, pad), (0, 0))) if pad > 0 else vh
+    return out @ params["wo"], {"k": new_k, "v": new_v}
+
+
+def attend_decode(params, cfg, x: jax.Array, lengths: jax.Array,
+                  cache: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode. x: (B, 1, d); lengths: (B,) tokens already cached
+    (i.e. the new token's absolute position).  Returns (out, new_cache).
+    """
+    B = x.shape[0]
+    S = cache["k"].shape[2]
+    hd = cfg.resolved_head_dim
+    q, k, v = _project_qkv(params, cfg, x, lengths[:, None])
+    # write new k/v at slot (rolling for SWA)
+    slot = lengths % S if cfg.sliding_window is not None else lengths
+    k_new = k[:, 0]  # (B, KVH, D)
+    v_new = v[:, 0]
+    batch_idx = jnp.arange(B)
+    new_cache = {}
+    if cfg.kv_quant:
+        kq, ks = _quantize_kv(k_new)
+        vq, vs = _quantize_kv(v_new)
+        new_cache = {
+            "k": cache["k"].at[batch_idx, :, slot, :].set(kq),
+            "v": cache["v"].at[batch_idx, :, slot, :].set(vq),
+            "k_scale": cache["k_scale"].at[batch_idx, :, slot].set(ks),
+            "v_scale": cache["v_scale"].at[batch_idx, :, slot].set(vs),
+        }
+        new_k = _dequantize_kv(new_cache["k"], new_cache["k_scale"], x.dtype)
+        new_v = _dequantize_kv(new_cache["v"], new_cache["v_scale"], x.dtype)
+    else:
+        new_k = cache["k"].at[batch_idx, :, slot, :].set(k_new)
+        new_v = cache["v"].at[batch_idx, :, slot, :].set(v_new)
+
+    # Pallas decode kernel path: blocked KV streaming, per-seq lengths
+    # masking (incl. fused int8 dequant).  Rolling SWA caches keep the XLA
+    # path (slot-validity masking is window-specific).
+    if cfg.use_pallas_attention and cfg.sliding_window is None:
+        from repro.kernels import ops as kernel_ops
+        from repro.kernels.decode_attention import decode_attention_quant
+        q1 = q[:, 0]  # (B, H, D)
+        if cfg.kv_quant:
+            interp = jax.default_backend() != "tpu"
+            attn = decode_attention_quant(
+                q1, new_cache["k"], new_cache["v"], new_cache["k_scale"],
+                new_cache["v_scale"], lengths + 1, interpret=interp)
+        else:
+            attn = kernel_ops.decode_attention(q1, new_k, new_v, lengths + 1)
+        out = attn[:, None].reshape(B, 1, cfg.num_heads * hd)
+        proj = out @ params["wo"]
+        return (proj, new_cache) if cfg.kv_quant else (proj, {"k": new_k, "v": new_v})
+
+    qh = q.transpose(0, 2, 1, 3)  # (B, H, 1, D)
+    kv_pos = jnp.arange(S)[None, :]  # slot index
+    if cfg.sliding_window is not None:
+        # slot s holds absolute position p iff p % S == s and p <= length;
+        # valid iff within the last `window` positions.
+        # absolute position held in slot s: the largest p <= lengths with p%S==s
+        abs_pos = lengths[:, None] - ((lengths[:, None] - kv_pos) % S)
+        valid = (abs_pos >= 0) & (abs_pos >= lengths[:, None] - (S - 1))
+        mask = valid[:, None, None, :]  # (B,1,1,S)
+    else:
+        mask = (kv_pos <= lengths[:, None])[:, None, None, :]
+    out = _sdpa(qh, new_k, new_v, mask)
+    out = out.transpose(0, 2, 1, 3).reshape(B, 1, cfg.num_heads * hd)
+    if cfg.kv_quant:
+        return out @ params["wo"], new_cache
+    return out @ params["wo"], {"k": new_k, "v": new_v}
+
+
+def attention_param_axes(cfg):
+    """Logical sharding axes per leaf (mirrors init_attention)."""
+    p = {
+        "wq": ("embed", "heads_x_dim"),
+        "wk": ("embed", "kv_heads_x_dim"),
+        "wv": ("embed", "kv_heads_x_dim"),
+        "wo": ("heads_x_dim", "embed"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ("heads_x_dim",)
+        p["bk"] = ("kv_heads_x_dim",)
+        p["bv"] = ("kv_heads_x_dim",)
+    return p

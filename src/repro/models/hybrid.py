@@ -1,0 +1,191 @@
+"""Zamba2-style hybrid: Mamba2 backbone + ONE weight-tied (shared) attention
+block applied every ``hybrid_attn_every`` layers. [arXiv:2411.15242]
+
+The shared block is stored once (not stacked); each application site keeps
+its own KV cache.  In long-context mode the model config's sliding window
+(set by the launcher for long_500k) bounds the materialized cache.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, ssm as ssm_lib
+
+
+def attn_sites(cfg) -> list:
+    """Layer indices after which the shared attention block runs."""
+    return [i for i in range(cfg.num_layers) if (i + 1) % cfg.hybrid_attn_every == 0]
+
+
+def init_hybrid_lm(key, cfg, dtype=jnp.float32):
+    ke, kb, ka, km = jax.random.split(key, 4)
+    block_keys = jax.random.split(kb, cfg.num_layers)
+    blocks = jax.vmap(lambda k: init_mamba_residual_block(k, cfg, dtype))(block_keys)
+    shared = {
+        "attn_norm": jnp.ones((cfg.d_model,), dtype),
+        "attn": attention.init_attention(ka, cfg, dtype),
+        "mlp_norm": jnp.ones((cfg.d_model,), dtype),
+        "mlp": layers.init_swiglu_mlp(km, cfg.d_model, cfg.d_ff, dtype),
+    }
+    return {
+        "embed": layers.embed_init(ke, cfg.padded_vocab, cfg.d_model, dtype),
+        "blocks": blocks,
+        "shared_attn": shared,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def init_mamba_residual_block(key, cfg, dtype=jnp.float32):
+    return {
+        "norm": jnp.ones((cfg.d_model,), dtype),
+        "mamba": ssm_lib.init_mamba_block(key, cfg, dtype),
+    }
+
+
+def hybrid_param_axes(cfg):
+    return {
+        "embed": ("vocab", "embed"),
+        "blocks": {"norm": ("embed",), "mamba": ssm_lib.mamba_param_axes(cfg)},
+        "shared_attn": {
+            "attn_norm": ("embed",),
+            "attn": attention.attention_param_axes(cfg),
+            "mlp_norm": ("embed",),
+            "mlp": {"gate": ("embed", "ff"), "up": ("embed", "ff"),
+                    "down": ("ff", "embed")},
+        },
+        "final_norm": ("embed",),
+    }
+
+
+def _shared_attn_full(params, cfg, x, positions):
+    sp = params["shared_attn"]
+    h = layers.rms_norm(x, sp["attn_norm"], cfg.rms_norm_eps)
+    x = x + attention.attend_train(sp["attn"], cfg, h, positions)
+    h = layers.rms_norm(x, sp["mlp_norm"], cfg.rms_norm_eps)
+    return x + layers.swiglu_mlp(sp["mlp"], h)
+
+
+def forward_train(params, cfg, x: jax.Array, positions: jax.Array,
+                  *, remat: bool = True):
+    """x: (B, L, d) embeddings -> hidden (B, L, d).
+
+    Each mamba layer (and each shared-attention application) is a remat
+    boundary: the SSD intra-chunk decay tensors (B, nc, Q, Q, H) are the
+    dominant live activations and must not persist across 38 layers
+    (EXPERIMENTS §Perf, zamba2 row)."""
+    sites = set(attn_sites(cfg))
+
+    def mamba_layer(x, bp):
+        h = layers.rms_norm(x, bp["norm"], cfg.rms_norm_eps)
+        out, _ = ssm_lib.mamba_block_full(bp["mamba"], cfg, h)
+        return x + out
+
+    def attn_layer(x, positions):
+        return _shared_attn_full(params, cfg, x, positions)
+
+    if remat:
+        mamba_layer = jax.checkpoint(mamba_layer)
+        attn_layer = jax.checkpoint(attn_layer)
+
+    for i in range(cfg.num_layers):
+        bp = jax.tree.map(lambda a: a[i], params["blocks"])
+        x = mamba_layer(x, bp)
+        if i in sites:
+            x = attn_layer(x, positions)
+    return layers.rms_norm(x, params["final_norm"], cfg.rms_norm_eps)
+
+
+def loss_fn(params, cfg, batch, *, remat: bool = True):
+    tokens = batch["tokens"]
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    x = params["embed"][inputs]
+    positions = jnp.arange(x.shape[1])[None, :]
+    hidden = forward_train(params, cfg, x, positions, remat=remat)
+    logits = layers.mask_padded_logits((hidden @ params["embed"].T).astype(jnp.float32), cfg.vocab_size)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(logz - gold)
+    return ce, {"ce": ce, "aux": jnp.float32(0.0)}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_state(cfg, batch: int, max_seq: int, dtype=jnp.float32):
+    n_sites = len(attn_sites(cfg))
+    conv = ssm_lib.init_conv_state(cfg, batch, dtype)
+    ssst = ssm_lib.init_ssm_state(cfg, batch, dtype)
+    kv = attention.init_kv_cache(cfg, batch, max_seq, dtype)
+    return {
+        "conv": jnp.broadcast_to(conv[None], (cfg.num_layers,) + conv.shape),
+        "ssm": jnp.broadcast_to(ssst[None], (cfg.num_layers,) + ssst.shape),
+        "kv": jax.tree.map(lambda a: jnp.broadcast_to(a[None], (n_sites,) + a.shape), kv),
+    }
+
+
+def prefill(params, cfg, tokens: jax.Array, state):
+    x = params["embed"][tokens]
+    positions = jnp.arange(x.shape[1])[None, :]
+    sites = attn_sites(cfg)
+    new_conv, new_ssm, new_kv = [], [], []
+    for i in range(cfg.num_layers):
+        bp = jax.tree.map(lambda a: a[i], params["blocks"])
+        h = layers.rms_norm(x, bp["norm"], cfg.rms_norm_eps)
+        out, st = ssm_lib.mamba_block_full(bp["mamba"], cfg, h)
+        new_conv.append(st["conv"])
+        new_ssm.append(st["ssm"])
+        x = x + out
+        if i in set(sites):
+            site_idx = sites.index(i)
+            sp = params["shared_attn"]
+            h = layers.rms_norm(x, sp["attn_norm"], cfg.rms_norm_eps)
+            cl = jax.tree.map(lambda a: a[site_idx], state["kv"])
+            a_out, kv = attention.attend_prefill(sp["attn"], cfg, h, positions, cl)
+            new_kv.append(kv)
+            x = x + a_out
+            h = layers.rms_norm(x, sp["mlp_norm"], cfg.rms_norm_eps)
+            x = x + layers.swiglu_mlp(sp["mlp"], h)
+    x = layers.rms_norm(x, params["final_norm"], cfg.rms_norm_eps)
+    logits = layers.mask_padded_logits(x[:, -1] @ params["embed"].T, cfg.vocab_size)
+    new_state = {
+        "conv": jnp.stack(new_conv),
+        "ssm": jnp.stack(new_ssm),
+        "kv": jax.tree.map(lambda *xs: jnp.stack(xs), *new_kv),
+    }
+    return logits, new_state
+
+
+def decode_step(params, cfg, tokens: jax.Array, lengths: jax.Array, state):
+    x = params["embed"][tokens[:, None]]
+    sites = attn_sites(cfg)
+    new_conv, new_ssm, new_kv = [], [], []
+    for i in range(cfg.num_layers):
+        bp = jax.tree.map(lambda a: a[i], params["blocks"])
+        h = layers.rms_norm(x, bp["norm"], cfg.rms_norm_eps)
+        st = {"conv": state["conv"][i], "ssm": state["ssm"][i]}
+        out, nst = ssm_lib.mamba_block_step(bp["mamba"], cfg, h, st)
+        new_conv.append(nst["conv"])
+        new_ssm.append(nst["ssm"])
+        x = x + out
+        if i in set(sites):
+            site_idx = sites.index(i)
+            sp = params["shared_attn"]
+            h = layers.rms_norm(x, sp["attn_norm"], cfg.rms_norm_eps)
+            cl = jax.tree.map(lambda a: a[site_idx], state["kv"])
+            a_out, kv = attention.attend_decode(sp["attn"], cfg, h, lengths, cl)
+            new_kv.append(kv)
+            x = x + a_out
+            h = layers.rms_norm(x, sp["mlp_norm"], cfg.rms_norm_eps)
+            x = x + layers.swiglu_mlp(sp["mlp"], h)
+    x = layers.rms_norm(x, params["final_norm"], cfg.rms_norm_eps)
+    logits = layers.mask_padded_logits(x[:, 0] @ params["embed"].T, cfg.vocab_size)
+    new_state = {
+        "conv": jnp.stack(new_conv),
+        "ssm": jnp.stack(new_ssm),
+        "kv": jax.tree.map(lambda *xs: jnp.stack(xs), *new_kv),
+    }
+    return logits, new_state

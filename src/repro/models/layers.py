@@ -1,0 +1,140 @@
+"""Shared building blocks: norms, RoPE, MLPs, initializers.
+
+All model code is functional: ``init_*`` builds a params pytree (nested
+dicts of jnp arrays), ``*_apply`` consumes it.  Parallel "spec trees" with
+the same treedef carry logical sharding axes per leaf (see
+``repro.distributed.sharding``).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.float32) -> jax.Array:
+    """Truncated-normal fan-in init (matches common LLM inits)."""
+    std = 1.0 / math.sqrt(in_dim)
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, (in_dim, out_dim), dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32) -> jax.Array:
+    return jax.random.normal(key, (vocab, dim), dtype) * 0.02
+
+
+def mask_padded_logits(logits: jax.Array, vocab_size: int) -> jax.Array:
+    """Mask the vocab-padding tail (see ModelConfig.padded_vocab)."""
+    if logits.shape[-1] == vocab_size:
+        return logits
+    idx = jnp.arange(logits.shape[-1])
+    return jnp.where(idx < vocab_size, logits, -1e30)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)).astype(dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim//2,) inverse frequencies."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotate pairs. x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_frequencies(head_dim, theta)  # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]  # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_swiglu_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d_model, d_ff, dtype),
+        "up": dense_init(k2, d_model, d_ff, dtype),
+        "down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def swiglu_mlp(params, x: jax.Array) -> jax.Array:
+    gate = jax.nn.silu(x @ params["gate"])
+    return (gate * (x @ params["up"])) @ params["down"]
+
+
+def init_gelu_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    """Whisper-style two-matrix GELU MLP (with biases)."""
+    k1, k2 = jax.random.split(key)
+    return {
+        "fc1": dense_init(k1, d_model, d_ff, dtype),
+        "b1": jnp.zeros((d_ff,), dtype),
+        "fc2": dense_init(k2, d_ff, d_model, dtype),
+        "b2": jnp.zeros((d_model,), dtype),
+    }
+
+
+def gelu_mlp(params, x: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(x @ params["fc1"] + params["b1"])
+    return h @ params["fc2"] + params["b2"]
+
+
+# ---------------------------------------------------------------------------
+# misc
+# ---------------------------------------------------------------------------
+
+def sinusoidal_positions(length: int, dim: int) -> jax.Array:
+    """(length, dim) fixed sinusoidal embeddings (whisper encoder)."""
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    idx = jnp.arange(dim // 2, dtype=jnp.float32)[None, :]
+    angle = pos / (10000.0 ** (2 * idx / dim))
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+def causal_mask(q_len: int, kv_len: int, q_offset) -> jax.Array:
+    """Boolean (q_len, kv_len) mask; True = attend. q_offset = absolute
+    position of the first query (supports decode where q_len=1)."""
+    q_pos = q_offset + jnp.arange(q_len)[:, None]
+    kv_pos = jnp.arange(kv_len)[None, :]
+    return kv_pos <= q_pos
+
+
+def sliding_window_mask(q_len: int, kv_len: int, q_offset, window: int) -> jax.Array:
+    q_pos = q_offset + jnp.arange(q_len)[:, None]
+    kv_pos = jnp.arange(kv_len)[None, :]
+    return (kv_pos <= q_pos) & (kv_pos > q_pos - window)

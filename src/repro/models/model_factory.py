@@ -1,0 +1,196 @@
+"""Unified model interface over all assigned architecture families.
+
+``build_model(cfg)`` returns a ``Model`` with:
+  * ``init(key, dtype)``               -> params pytree
+  * ``param_axes()``                   -> same-treedef logical-axis tree
+  * ``loss(params, batch)``            -> (scalar, metrics)     [train_4k]
+  * ``init_cache(batch, max_seq)``     -> decode cache/state pytree
+  * ``cache_axes(batch, max_seq)``     -> logical axes for the cache
+  * ``prefill(params, batch, cache)``  -> (last logits, cache)  [prefill_32k]
+  * ``decode_step(params, cache, tokens, lengths)`` -> (logits, cache)
+  * ``input_spec_extras(shape)``       -> modality-stub entries for input_specs
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, hybrid, ssm_lm, transformer
+from repro.models import attention, ssm as ssm_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    param_axes: Callable
+    loss: Callable
+    init_cache: Callable
+    cache_axes: Callable
+    prefill: Callable
+    decode_step: Callable
+
+    def eval_shape_params(self, dtype=jnp.float32):
+        """Param ShapeDtypeStructs without allocation (for the dry-run)."""
+        return jax.eval_shape(lambda k: self.init(k, dtype), jax.random.key(0))
+
+
+def _kv_cache_axes_tree(cfg, stacked_dims: int = 1):
+    """(layers, B, KVH, S, D) logical axes."""
+    ax = (None,) * stacked_dims + ("batch", "kv_heads", "kv_seq", None)
+    tree = {"k": ax, "v": ax}
+    if cfg.kv_quant:
+        sax = (None,) * stacked_dims + ("batch", "kv_heads", "kv_seq")
+        tree["k_scale"] = sax
+        tree["v_scale"] = sax
+    return tree
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.arch_type in ("dense", "moe", "vlm"):
+        return _build_transformer(cfg)
+    if cfg.arch_type == "ssm":
+        return _build_ssm(cfg)
+    if cfg.arch_type == "hybrid":
+        return _build_hybrid(cfg)
+    if cfg.arch_type == "audio":
+        return _build_encdec(cfg)
+    raise ValueError(f"unknown arch_type {cfg.arch_type}")
+
+
+# ---------------------------------------------------------------------------
+
+def _build_transformer(cfg):
+    def prefill_fn(params, batch, cache):
+        return transformer.prefill(params, cfg, batch["tokens"], cache,
+                                   patch_embeds=batch.get("patch_embeds"))
+
+    return Model(
+        cfg=cfg,
+        init=lambda key, dtype=jnp.float32: transformer.init_lm(key, cfg, dtype),
+        param_axes=lambda: transformer.lm_param_axes(cfg),
+        loss=lambda params, batch, **kw: transformer.loss_fn(params, cfg, batch, **kw),
+        init_cache=lambda batch, max_seq, dtype=jnp.float32:
+            transformer.init_cache(cfg, batch, max_seq, dtype),
+        cache_axes=lambda: _kv_cache_axes_tree(cfg),
+        prefill=prefill_fn,
+        decode_step=lambda params, cache, tokens, lengths:
+            transformer.decode_step(params, cfg, tokens, lengths, cache),
+    )
+
+
+def _build_ssm(cfg):
+    return Model(
+        cfg=cfg,
+        init=lambda key, dtype=jnp.float32: ssm_lm.init_ssm_lm(key, cfg, dtype),
+        param_axes=lambda: ssm_lm.ssm_lm_param_axes(cfg),
+        loss=lambda params, batch, **kw: ssm_lm.loss_fn(params, cfg, batch, **kw),
+        init_cache=lambda batch, max_seq, dtype=jnp.float32:
+            ssm_lm.init_state(cfg, batch, max_seq, dtype),
+        cache_axes=lambda: {
+            "conv": (None, "batch", None, "ssm_inner"),
+            "ssm": (None, "batch", "ssm_heads", None, None),
+        },
+        prefill=lambda params, batch, cache:
+            ssm_lm.prefill(params, cfg, batch["tokens"], cache),
+        decode_step=lambda params, cache, tokens, lengths:
+            ssm_lm.decode_step(params, cfg, tokens, lengths, cache),
+    )
+
+
+def _build_hybrid(cfg):
+    return Model(
+        cfg=cfg,
+        init=lambda key, dtype=jnp.float32: hybrid.init_hybrid_lm(key, cfg, dtype),
+        param_axes=lambda: hybrid.hybrid_param_axes(cfg),
+        loss=lambda params, batch, **kw: hybrid.loss_fn(params, cfg, batch, **kw),
+        init_cache=lambda batch, max_seq, dtype=jnp.float32:
+            hybrid.init_state(cfg, batch, max_seq, dtype),
+        cache_axes=lambda: {
+            "conv": (None, "batch", None, "ssm_inner"),
+            "ssm": (None, "batch", "ssm_heads", None, None),
+            "kv": _kv_cache_axes_tree(cfg),
+        },
+        prefill=lambda params, batch, cache:
+            hybrid.prefill(params, cfg, batch["tokens"], cache),
+        decode_step=lambda params, cache, tokens, lengths:
+            hybrid.decode_step(params, cfg, tokens, lengths, cache),
+    )
+
+
+def _build_encdec(cfg):
+    cross_ax = (None, "batch", "kv_heads", None, None)
+    return Model(
+        cfg=cfg,
+        init=lambda key, dtype=jnp.float32: encdec.init_encdec_lm(key, cfg, dtype),
+        param_axes=lambda: encdec.encdec_param_axes(cfg),
+        loss=lambda params, batch, **kw: encdec.loss_fn(params, cfg, batch, **kw),
+        init_cache=lambda batch, max_seq, dtype=jnp.float32:
+            encdec.init_cache(cfg, batch, max_seq, dtype),
+        cache_axes=lambda: {
+            "self": _kv_cache_axes_tree(cfg),
+            "cross_k": cross_ax,
+            "cross_v": cross_ax,
+        },
+        prefill=lambda params, batch, cache:
+            encdec.prefill(params, cfg, batch["tokens"], cache, batch["frame_embeds"]),
+        decode_step=lambda params, cache, tokens, lengths:
+            encdec.decode_step(params, cfg, tokens, lengths, cache),
+    )
+
+
+# ---------------------------------------------------------------------------
+# modality stubs for input_specs
+# ---------------------------------------------------------------------------
+
+def batch_struct(cfg: ModelConfig, batch: int, seq: int, kind: str,
+                 dtype=jnp.float32) -> Dict[str, Any]:
+    """ShapeDtypeStructs (or concrete arrays via ``materialize_batch``) for
+    one step's data inputs."""
+    sds = jax.ShapeDtypeStruct
+    if kind == "train":
+        out = {"tokens": sds((batch, seq + 1), jnp.int32)}
+        if cfg.vision is not None:
+            out["patch_embeds"] = sds(
+                (batch, cfg.vision.num_patch_tokens,
+                 cfg.vision.patch_embed_dim or cfg.d_model), dtype)
+        if cfg.encoder is not None:
+            out["frame_embeds"] = sds((batch, cfg.encoder.num_frames, cfg.d_model), dtype)
+        return out
+    if kind == "prefill":
+        n_text = seq
+        if cfg.vision is not None:
+            n_text = max(seq - cfg.vision.num_patch_tokens, 1)
+        out = {"tokens": sds((batch, n_text), jnp.int32)}
+        if cfg.vision is not None:
+            out["patch_embeds"] = sds(
+                (batch, cfg.vision.num_patch_tokens,
+                 cfg.vision.patch_embed_dim or cfg.d_model), dtype)
+        if cfg.encoder is not None:
+            out["frame_embeds"] = sds((batch, cfg.encoder.num_frames, cfg.d_model), dtype)
+        return out
+    if kind == "decode":
+        return {"tokens": sds((batch,), jnp.int32),
+                "lengths": sds((batch,), jnp.int32)}
+    raise ValueError(kind)
+
+
+def materialize_batch(cfg: ModelConfig, batch: int, seq: int, kind: str,
+                      key, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    """Concrete random data matching ``batch_struct`` (smoke tests)."""
+    structs = batch_struct(cfg, batch, seq, kind, dtype)
+    out = {}
+    for name, s in structs.items():
+        key = jax.random.fold_in(key, hash(name) % (2 ** 31))
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            if name == "lengths":
+                out[name] = jnp.full(s.shape, seq - 1, jnp.int32)
+            else:
+                out[name] = jax.random.randint(key, s.shape, 0, cfg.vocab_size, jnp.int32)
+        else:
+            out[name] = jax.random.normal(key, s.shape, s.dtype) * 0.02
+    return out

@@ -1,0 +1,138 @@
+"""Top-k MoE layer with capacity-bounded scatter dispatch.
+
+TPU adaptation notes (DESIGN.md §3): instead of the GShard (T, E, C) one-hot
+dispatch einsum — whose dispatch tensor is enormous for fine-grained expert
+counts like qwen3's 128 — we compute per-token in-expert slot indices with a
+sorted cumulative count and use scatter/gather.  XLA lowers the scatter to a
+sort-based TPU scatter, and GSPMD shards the (E, C, d) dispatched activations
+over the ``model`` mesh axis (expert parallelism), inserting the all-to-all
+the paper's MoE-serving regime depends on.
+
+Router: softmax over expert logits, top-k selection, probs renormalized over
+the selected experts; Switch-style load-balance aux loss.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def init_moe(key, cfg, dtype=jnp.float32):
+    moe = cfg.moe
+    d = cfg.d_model
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    E, F = moe.num_experts, moe.d_ff_expert
+    std = 1.0 / math.sqrt(d)
+    return {
+        "router": layers.dense_init(kr, d, E, dtype),
+        "gate": std * jax.random.truncated_normal(kg, -2, 2, (E, d, F), dtype),
+        "up": std * jax.random.truncated_normal(ku, -2, 2, (E, d, F), dtype),
+        "down": (1.0 / math.sqrt(F)) * jax.random.truncated_normal(kd, -2, 2, (E, F, d), dtype),
+    }
+
+
+def moe_param_axes(cfg):
+    return {
+        "router": ("embed", "experts"),
+        "gate": ("experts", "embed", "moe_ff"),
+        "up": ("experts", "embed", "moe_ff"),
+        "down": ("experts", "moe_ff", "embed"),
+    }
+
+
+def _topk_routing(logits: jax.Array, k: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """logits: (T, E) -> (weights (T,k), expert_ids (T,k), aux_loss scalar)."""
+    T, E = logits.shape
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_ids = jax.lax.top_k(probs, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)  # renormalize
+    # Switch aux loss: E * sum_e (fraction_tokens_e * mean_prob_e)
+    one_hot = jax.nn.one_hot(top_ids, E, dtype=jnp.float32)  # (T, k, E)
+    tokens_per_expert = jnp.sum(one_hot, axis=(0, 1)) / (T * k)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(tokens_per_expert * mean_prob)
+    return top_p, top_ids, aux
+
+
+def _dispatch_slots(expert_ids: jax.Array, capacity: int, E: int):
+    """expert_ids: (N,) -> (keep (N,), slot (N,)) via stable-sort counting."""
+    N = expert_ids.shape[0]
+    order = jnp.argsort(expert_ids, stable=True)
+    sorted_expert = expert_ids[order]
+    idx = jnp.arange(N)
+    seg_start = jnp.searchsorted(sorted_expert, sorted_expert, side="left")
+    pos_sorted = idx - seg_start
+    pos = jnp.zeros_like(pos_sorted).at[order].set(pos_sorted)
+    keep = pos < capacity  # capacity drop (overflow tokens pass via residual)
+    slot = expert_ids * capacity + jnp.where(keep, pos, 0)
+    return keep, slot
+
+
+def _moe_tokens(params, xf: jax.Array, weights: jax.Array,
+                expert_ids: jax.Array, capacity: int, E: int, k: int) -> jax.Array:
+    """Scatter-dispatch + expert SwiGLU + gather-combine for a flat token
+    block xf: (T, d).  vmapped over dispatch groups (see apply_moe)."""
+    T, d = xf.shape
+    flat_expert = expert_ids.reshape(-1)            # (T*k,)
+    flat_weight = weights.reshape(-1)
+    flat_token = jnp.repeat(jnp.arange(T), k)
+
+    keep, slot = _dispatch_slots(flat_expert, capacity, E)
+    safe_slot = jnp.where(keep, slot, E * capacity)  # overflow bucket
+
+    dispatched = jnp.zeros((E * capacity + 1, d), xf.dtype)
+    dispatched = dispatched.at[safe_slot].set(xf[flat_token])
+    dispatched = dispatched[:-1].reshape(E, capacity, d)
+
+    gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", dispatched, params["gate"],
+                                  preferred_element_type=jnp.float32))
+    up = jnp.einsum("ecd,edf->ecf", dispatched, params["up"],
+                    preferred_element_type=jnp.float32)
+    expert_out = jnp.einsum("ecf,efd->ecd", (gate * up).astype(xf.dtype),
+                            params["down"], preferred_element_type=jnp.float32)
+
+    flat_out = expert_out.reshape(E * capacity, d)
+    pair_out = jnp.where(keep[:, None], flat_out[jnp.where(keep, slot, 0)], 0.0)
+    pair_out = pair_out * flat_weight[:, None].astype(pair_out.dtype)
+    return jnp.zeros((T, d), xf.dtype).at[flat_token].add(pair_out.astype(xf.dtype))
+
+
+def apply_moe(params, cfg, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, L, d) -> (out (B, L, d), aux_loss scalar).
+
+    With ``moe.dispatch_groups = G`` (beyond-paper perf lever, EXPERIMENTS
+    §Perf H2) tokens are dispatched in G groups aligned with the data mesh
+    axis: the scatter/gather stays shard-local, the expert einsum carries a
+    (G:data, E:model) 2-D sharding, and the combine lowers to one
+    all-reduce — instead of GSPMD all-gathering every token to every device.
+    Capacity is per-group, so routing decisions are identical in
+    distribution (statistically) but not bitwise vs the ungrouped path.
+    """
+    moe = cfg.moe
+    B, L, d = x.shape
+    T = B * L
+    E, k = moe.num_experts, moe.experts_per_token
+    xf = x.reshape(T, d)
+
+    logits = xf @ params["router"]
+    weights, expert_ids, aux = _topk_routing(logits, k)  # (T,k)
+
+    G = moe.dispatch_groups or 1
+    if G == 1 or T % G != 0:
+        capacity = max(int(math.ceil(T * k / E * moe.capacity_factor)), k)
+        out = _moe_tokens(params, xf, weights, expert_ids, capacity, E, k)
+        return out.reshape(B, L, d), aux.astype(jnp.float32)
+
+    Tg = T // G
+    capacity = max(int(math.ceil(Tg * k / E * moe.capacity_factor)), k)
+    xg = xf.reshape(G, Tg, d)
+    wg = weights.reshape(G, Tg, k)
+    eg = expert_ids.reshape(G, Tg, k)
+    out = jax.vmap(lambda xx, ww, ee: _moe_tokens(params, xx, ww, ee,
+                                                  capacity, E, k))(xg, wg, eg)
+    return out.reshape(B, L, d), aux.astype(jnp.float32)

@@ -1,0 +1,281 @@
+"""Mamba2 (SSD — state-space duality) block in JAX.
+
+Discretized recurrence, per head h with scalar decay A_h < 0:
+
+    a_t = exp(dt_t * A)                       (scalar per head)
+    h_t = a_t * h_{t-1} + dt_t * B_t ⊗ x_t    (state:  (N, P))
+    y_t = C_t · h_t + D * x_t
+
+Train/prefill use the chunked SSD algorithm (intra-chunk quadratic form +
+inter-chunk ``lax.scan`` over states) — matching arXiv:2405.21060 §6 — which
+maps onto the MXU as batched (Q×Q)·(Q×P) matmuls; decode uses the O(1)
+recurrent step.  A Pallas kernel for the intra-chunk part lives in
+``repro.kernels.ssd_scan`` (this module is also its oracle's backbone).
+
+Layout: x (B, L, H, P); B,C (B, L, G, N) with H/G heads per group;
+state (B, H, N, P).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_mamba_block(key, cfg, dtype=jnp.float32):
+    ssm = cfg.ssm
+    d = cfg.d_model
+    di = ssm.d_inner(d)
+    nh = ssm.num_heads(d)
+    G, N, W = ssm.n_groups, ssm.d_state, ssm.conv_width
+    conv_dim = di + 2 * G * N
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "in_proj": layers.dense_init(k1, d, 2 * di + 2 * G * N + nh, dtype),
+        "conv_w": 0.1 * jax.random.normal(k2, (W, conv_dim), dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(dtype)),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(k3, (nh,), jnp.float32,
+                                       math.log(1e-3), math.log(1e-1))))).astype(dtype),
+        "D": jnp.ones((nh,), dtype),
+        "norm_scale": jnp.ones((di,), dtype),
+        "out_proj": layers.dense_init(k4, di, d, dtype),
+    }
+
+
+def mamba_param_axes(cfg):
+    return {
+        "in_proj": ("embed", "ssm_inner"),
+        "conv_w": (None, "ssm_inner"),
+        "conv_b": ("ssm_inner",),
+        "A_log": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+        "D": ("ssm_heads",),
+        "norm_scale": ("ssm_inner",),
+        "out_proj": ("ssm_inner", "embed"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSD core (chunked)
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, chunk: int,
+                init_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x:  (B, L, H, P)   dt: (B, L, H)   A: (H,) negative
+    Bm: (B, L, G, N)   Cm: (B, L, G, N)
+    init_state: (B, H, N, P) or None.
+    Returns (y (B, L, H, P), final_state (B, H, N, P)).  L % chunk == 0.
+    """
+    Bsz, L, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    assert L % chunk == 0, (L, chunk)
+    nc = L // chunk
+    rep = H // G
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = jnp.repeat(Bm.astype(jnp.float32), rep, axis=2)  # (B, L, H, N)
+    Cf = jnp.repeat(Cm.astype(jnp.float32), rep, axis=2)
+
+    # chunked views: (B, nc, Q, ...)
+    xc = xf.reshape(Bsz, nc, chunk, H, P)
+    dtc = dtf.reshape(Bsz, nc, chunk, H)
+    Bc = Bf.reshape(Bsz, nc, chunk, H, N)
+    Cc = Cf.reshape(Bsz, nc, chunk, H, N)
+
+    log_a = dtc * A[None, None, None, :]          # (B, nc, Q, H), <= 0
+    cum = jnp.cumsum(log_a, axis=2)               # inclusive cumsum within chunk
+
+    # --- intra-chunk (quadratic attention-like form) ---
+    # decay(i, j) = exp(cum_i - cum_j) for j <= i  (decay strictly after j)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (B,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bnihs,bnjhs->bnijh", Cc, Bc)          # (B,nc,Q,Q,H)
+    att = cb * decay * dtc[:, :, None, :, :]               # weight dt_j
+    y_intra = jnp.einsum("bnijh,bnjhp->bnihp", att, xc)
+
+    # --- chunk states ---
+    # state_c = sum_j exp(cum_Q - cum_j) dt_j B_j ⊗ x_j
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)        # (B,nc,Q,H)
+    weighted_x = xc * (dtc * decay_to_end)[..., None]      # (B,nc,Q,H,P)
+    states = jnp.einsum("bnjhs,bnjhp->bnhsp", Bc, weighted_x)  # (B,nc,H,N,P)
+
+    # --- inter-chunk recurrence over nc chunks ---
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                # (B,nc,H)
+    h0 = (jnp.zeros((Bsz, H, N, P), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(h, inp):
+        s, dcy = inp  # s: (B,H,N,P), dcy: (B,H)
+        h_prev = h
+        h = dcy[:, :, None, None] * h + s
+        return h, h_prev
+
+    (h_final, h_prevs) = jax.lax.scan(
+        step, h0, (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)             # (B,nc,H,N,P) state entering chunk
+
+    # --- inter-chunk contribution ---
+    in_decay = jnp.exp(cum)                                # decay from chunk start to i (inclusive)
+    y_inter = jnp.einsum("bnihs,bnhsp->bnihp", Cc * in_decay[..., None], h_prevs)
+
+    y = (y_intra + y_inter).reshape(Bsz, L, H, P)
+    return y.astype(x.dtype), h_final
+
+
+def ssd_step(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+             Cm: jax.Array, state: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """O(1) recurrent decode step.
+
+    x: (B, H, P), dt: (B, H), Bm/Cm: (B, G, N), state: (B, H, N, P).
+    """
+    H = x.shape[1]
+    G = Bm.shape[1]
+    rep = H // G
+    Bf = jnp.repeat(Bm.astype(jnp.float32), rep, axis=1)   # (B, H, N)
+    Cf = jnp.repeat(Cm.astype(jnp.float32), rep, axis=1)
+    a = jnp.exp(dt.astype(jnp.float32) * A[None, :])       # (B, H)
+    dBx = jnp.einsum("bhn,bhp->bhnp", Bf * dt.astype(jnp.float32)[..., None],
+                     x.astype(jnp.float32))
+    new_state = a[:, :, None, None] * state.astype(jnp.float32) + dBx
+    y = jnp.einsum("bhn,bhnp->bhp", Cf, new_state)
+    return y.astype(x.dtype), new_state
+
+
+def ssd_recurrent_reference(x, dt, A, Bm, Cm, init_state=None):
+    """Naive per-token recurrence — oracle for ssd_chunked (tests)."""
+    Bsz, L, H, P = x.shape
+    N = Bm.shape[-1]
+    h = (jnp.zeros((Bsz, H, N, P), jnp.float32) if init_state is None
+         else init_state.astype(jnp.float32))
+
+    def step(h, t):
+        y, h = ssd_step(x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t], h)
+        return h, y
+
+    h, ys = jax.lax.scan(step, h, jnp.arange(L))
+    return ys.transpose(1, 0, 2, 3), h
+
+
+# ---------------------------------------------------------------------------
+# full block
+# ---------------------------------------------------------------------------
+
+def _split_proj(params, cfg, proj):
+    ssm = cfg.ssm
+    d = cfg.d_model
+    di = ssm.d_inner(d)
+    G, N = ssm.n_groups, ssm.d_state
+    nh = ssm.num_heads(d)
+    z, xBC, dt = jnp.split(proj, [di, di + di + 2 * G * N], axis=-1)
+    return z, xBC, dt, di, G, N, nh
+
+
+def init_conv_state(cfg, batch: int, dtype=jnp.float32) -> jax.Array:
+    ssm = cfg.ssm
+    conv_dim = ssm.d_inner(cfg.d_model) + 2 * ssm.n_groups * ssm.d_state
+    return jnp.zeros((batch, ssm.conv_width - 1, conv_dim), dtype)
+
+
+def init_ssm_state(cfg, batch: int, dtype=jnp.float32) -> jax.Array:
+    ssm = cfg.ssm
+    nh = ssm.num_heads(cfg.d_model)
+    return jnp.zeros((batch, nh, ssm.d_state, ssm.head_dim), jnp.float32)
+
+
+def _causal_conv_full(xBC: jax.Array, w: jax.Array, b: jax.Array,
+                      prev: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv over (B, L, C); prev: (B, W-1, C) history.
+    Returns (out (B, L, C), new_history)."""
+    W = w.shape[0]
+    B, L, C = xBC.shape
+    hist = jnp.zeros((B, W - 1, C), xBC.dtype) if prev is None else prev
+    padded = jnp.concatenate([hist, xBC], axis=1)  # (B, L+W-1, C)
+    out = jnp.zeros((B, L, C), jnp.float32)
+    for i in range(W):  # small fixed width: unrolled taps
+        out = out + padded[:, i:i + L, :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    out = out + b.astype(jnp.float32)
+    new_hist = padded[:, L:, :] if L >= W - 1 else padded[:, -(W - 1):, :]
+    return jax.nn.silu(out).astype(xBC.dtype), new_hist
+
+
+def mamba_block_full(params, cfg, u: jax.Array,
+                     init_states: Optional[Dict[str, jax.Array]] = None
+                     ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full-sequence mamba2 block. u: (B, L, d) -> (out, states)."""
+    ssm = cfg.ssm
+    proj = u @ params["in_proj"]
+    z, xBC, dt, di, G, N, nh = _split_proj(params, cfg, proj)
+    prev_conv = init_states["conv"] if init_states else None
+    xBC, conv_state = _causal_conv_full(xBC, params["conv_w"], params["conv_b"], prev_conv)
+    x, Bm, Cm = jnp.split(xBC, [di, di + G * N], axis=-1)
+    Bsz, L, _ = u.shape
+    P = ssm.head_dim
+    x = x.reshape(Bsz, L, nh, P)
+    Bm = Bm.reshape(Bsz, L, G, N)
+    Cm = Cm.reshape(Bsz, L, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    prev_ssm = init_states["ssm"] if init_states else None
+    # pad L to a multiple of chunk
+    Q = ssm.chunk_size
+    pad = (-L) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    y, ssm_state = ssd_chunked(x, dt, A, Bm, Cm, Q, prev_ssm)
+    y = y[:, :L]
+    x = x[:, :L]
+    y = y + x * params["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(Bsz, L, di)
+    y = layers.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                        params["norm_scale"], cfg.rms_norm_eps)
+    return y @ params["out_proj"], {"conv": conv_state, "ssm": ssm_state}
+
+
+def mamba_block_step(params, cfg, u: jax.Array, states: Dict[str, jax.Array]
+                     ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode. u: (B, 1, d); states: {"conv": (B,W-1,C), "ssm": (B,H,N,P)}."""
+    ssm = cfg.ssm
+    proj = u[:, 0] @ params["in_proj"]  # (B, ·)
+    z, xBC, dt, di, G, N, nh = _split_proj(params, cfg, proj[:, None, :])
+    z, xBC, dt = z[:, 0], xBC[:, 0], dt[:, 0]
+    # conv update
+    W = ssm.conv_width
+    hist = states["conv"]  # (B, W-1, C)
+    window = jnp.concatenate([hist, xBC[:, None, :]], axis=1)  # (B, W, C)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                          params["conv_w"].astype(jnp.float32)) + params["conv_b"].astype(jnp.float32)
+    xBC_c = jax.nn.silu(conv_out).astype(u.dtype)
+    new_hist = window[:, 1:, :]
+    x, Bm, Cm = jnp.split(xBC_c, [di, di + G * N], axis=-1)
+    Bsz = u.shape[0]
+    P = ssm.head_dim
+    x = x.reshape(Bsz, nh, P)
+    Bm = Bm.reshape(Bsz, G, N)
+    Cm = Cm.reshape(Bsz, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, new_state = ssd_step(x, dt, A, Bm, Cm, states["ssm"])
+    y = y + x * params["D"].astype(y.dtype)[None, :, None]
+    y = y.reshape(Bsz, 1, di)
+    y = layers.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)[:, None, :],
+                        params["norm_scale"], cfg.rms_norm_eps)
+    return y @ params["out_proj"], {"conv": new_hist, "ssm": new_state}

@@ -1,0 +1,101 @@
+"""Attention-free Mamba2 LM (mamba2-130m). [arXiv:2405.21060]"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, ssm as ssm_lib
+
+
+def init_ssm_lm(key, cfg, dtype=jnp.float32):
+    ke, kb = jax.random.split(key)
+    block_keys = jax.random.split(kb, cfg.num_layers)
+
+    def init_one(k):
+        return {"norm": jnp.ones((cfg.d_model,), dtype),
+                "mamba": ssm_lib.init_mamba_block(k, cfg, dtype)}
+
+    return {
+        "embed": layers.embed_init(ke, cfg.padded_vocab, cfg.d_model, dtype),
+        "blocks": jax.vmap(init_one)(block_keys),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def ssm_lm_param_axes(cfg):
+    return {
+        "embed": ("vocab", "embed"),
+        "blocks": {"norm": ("embed",), "mamba": ssm_lib.mamba_param_axes(cfg)},
+        "final_norm": ("embed",),
+    }
+
+
+def forward_train(params, cfg, x: jax.Array, *, remat: bool = True) -> jax.Array:
+    def block(x, bp):
+        h = layers.rms_norm(x, bp["norm"], cfg.rms_norm_eps)
+        out, _ = ssm_lib.mamba_block_full(bp["mamba"], cfg, h)
+        return x + out
+
+    body = jax.checkpoint(block) if remat else block
+
+    def scan_fn(x, bp):
+        return body(x, bp), None
+
+    x, _ = jax.lax.scan(scan_fn, x, params["blocks"])
+    return layers.rms_norm(x, params["final_norm"], cfg.rms_norm_eps)
+
+
+def loss_fn(params, cfg, batch, *, remat: bool = True):
+    tokens = batch["tokens"]
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    x = params["embed"][inputs]
+    hidden = forward_train(params, cfg, x, remat=remat)
+    logits = layers.mask_padded_logits((hidden @ params["embed"].T).astype(jnp.float32), cfg.vocab_size)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(logz - gold)
+    return ce, {"ce": ce, "aux": jnp.float32(0.0)}
+
+
+def init_state(cfg, batch: int, max_seq: int, dtype=jnp.float32):
+    conv = ssm_lib.init_conv_state(cfg, batch, dtype)
+    ssst = ssm_lib.init_ssm_state(cfg, batch, dtype)
+    return {
+        "conv": jnp.broadcast_to(conv[None], (cfg.num_layers,) + conv.shape),
+        "ssm": jnp.broadcast_to(ssst[None], (cfg.num_layers,) + ssst.shape),
+    }
+
+
+def prefill(params, cfg, tokens: jax.Array, state):
+    x = params["embed"][tokens]
+
+    def scan_fn(x, inp):
+        bp, conv, ssst = inp
+        h = layers.rms_norm(x, bp["norm"], cfg.rms_norm_eps)
+        out, st = ssm_lib.mamba_block_full(bp["mamba"], cfg, h,
+                                           {"conv": conv, "ssm": ssst})
+        return x + out, (st["conv"], st["ssm"])
+
+    x, (conv, ssst) = jax.lax.scan(scan_fn, x,
+                                   (params["blocks"], state["conv"], state["ssm"]))
+    x = layers.rms_norm(x, params["final_norm"], cfg.rms_norm_eps)
+    logits = layers.mask_padded_logits(x[:, -1] @ params["embed"].T, cfg.vocab_size)
+    return logits, {"conv": conv, "ssm": ssst}
+
+
+def decode_step(params, cfg, tokens: jax.Array, lengths: jax.Array, state):
+    del lengths  # SSM state is position-free
+    x = params["embed"][tokens[:, None]]
+
+    def scan_fn(x, inp):
+        bp, conv, ssst = inp
+        h = layers.rms_norm(x, bp["norm"], cfg.rms_norm_eps)
+        out, st = ssm_lib.mamba_block_step(bp["mamba"], cfg, h,
+                                           {"conv": conv, "ssm": ssst})
+        return x + out, (st["conv"], st["ssm"])
+
+    x, (conv, ssst) = jax.lax.scan(scan_fn, x,
+                                   (params["blocks"], state["conv"], state["ssm"]))
+    x = layers.rms_norm(x, params["final_norm"], cfg.rms_norm_eps)
+    logits = layers.mask_padded_logits(x[:, 0] @ params["embed"].T, cfg.vocab_size)
+    return logits, {"conv": conv, "ssm": ssst}

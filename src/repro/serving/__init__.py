@@ -1,0 +1,5 @@
+from repro.serving.engine import ContinuousBatchingEngine, EngineConfig, EngineStats
+from repro.serving.kv_cache import BlockManager, OutOfBlocksError
+
+__all__ = ["ContinuousBatchingEngine", "EngineConfig", "EngineStats",
+           "BlockManager", "OutOfBlocksError"]

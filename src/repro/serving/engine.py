@@ -1,0 +1,329 @@
+"""Continuous-batching LLM engine (the "LLM serving instance" of Def. 2.3).
+
+Real-execution engine: actual JAX models (reduced configs on CPU; the same
+code path jit-compiles for TPU), iteration-level scheduling a la
+Orca/vLLM:
+
+  * fixed slot array (``max_slots``) holding the running batch,
+  * paged KV accounting via ``BlockManager`` (admission + preemption),
+  * ``step()`` = admit-from-pull-source, then ONE decode iteration for all
+    active slots,
+  * request eviction with host-side KV/state snapshots (the paper's
+    eviction LSO — resume skips prefill entirely),
+  * model swapping (flush KV, replace weights; paper's swap LSO).
+
+All cache pytrees have layout (layers/sites, batch, ...), so slot insert /
+extract are uniform ``tree_map``s over axis 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.request import Request
+from repro.models.model_factory import Model
+from repro.serving.kv_cache import BlockManager
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_slots: int = 8
+    max_seq_len: int = 512
+    block_size: int = 16
+    kv_blocks: Optional[int] = None    # None => max_slots*max_seq_len worth
+    eos_token: Optional[int] = None
+    dtype: Any = jnp.float32
+
+    def resolved_kv_blocks(self) -> int:
+        if self.kv_blocks is not None:
+            return self.kv_blocks
+        return (self.max_slots * self.max_seq_len) // self.block_size
+
+
+@dataclasses.dataclass
+class EngineStats:
+    decode_iterations: int = 0
+    prefills: int = 0
+    evictions: int = 0
+    resumes: int = 0
+    model_swaps: int = 0
+    tokens_generated: int = 0
+    preemptions: int = 0
+    decode_time: float = 0.0
+    prefill_time: float = 0.0
+    swap_time: float = 0.0
+
+
+class ContinuousBatchingEngine:
+    def __init__(self, model: Model, params, cfg: EngineConfig,
+                 model_name: str = "default",
+                 clock: Callable[[], float] = time.monotonic):
+        self.cfg = cfg
+        self.clock = clock
+        self.model = model
+        self.params = params
+        self.model_name = model_name
+        self.stats = EngineStats()
+
+        self.block_mgr = BlockManager(cfg.resolved_kv_blocks(), cfg.block_size)
+        self.slots: List[Optional[Request]] = [None] * cfg.max_slots
+        self.lengths = np.zeros(cfg.max_slots, np.int32)
+        self.cache = model.init_cache(cfg.max_slots, cfg.max_seq_len, cfg.dtype)
+        self.pull_source: Optional[Callable[[], Optional[Request]]] = None
+        self.completed: List[Request] = []
+        self._pushback: Optional[Request] = None
+
+        self._decode_fn = jax.jit(self._decode_impl)
+        self._prefill_cache = {}  # per-length jitted prefill
+
+    # ------------------------------------------------------------------
+    # jitted compute
+    # ------------------------------------------------------------------
+    def _decode_impl(self, params, cache, tokens, lengths):
+        logits, new_cache = self.model.decode_step(params, cache, tokens, lengths)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tokens, new_cache
+
+    def _prefill_one(self, prompt: np.ndarray, extras: Dict[str, Any]):
+        """Prefill a single request (batch=1, exact length — SSM-state safe)."""
+        L = len(prompt)
+        key = (L,) + tuple(sorted(extras))
+        if key not in self._prefill_cache:
+            def fn(params, batch, cache):
+                logits, new_cache = self.model.prefill(params, batch, cache)
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                return tok, new_cache
+            self._prefill_cache[key] = jax.jit(fn)
+        batch = {"tokens": jnp.asarray(prompt, jnp.int32)[None]}
+        batch.update({k: jnp.asarray(v)[None] for k, v in extras.items()})
+        cache1 = self.model.init_cache(1, self.cfg.max_seq_len, self.cfg.dtype)
+        tok, cache1 = self._prefill_cache[key](self.params, batch, cache1)
+        return int(tok[0]), cache1
+
+    # ------------------------------------------------------------------
+    # slot plumbing
+    # ------------------------------------------------------------------
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.slots):
+            if r is None:
+                return i
+        return None
+
+    def _insert_cache(self, slot_cache, b: int) -> None:
+        self.cache = jax.tree.map(
+            lambda full, one: full.at[:, b].set(one[:, 0]), self.cache, slot_cache)
+
+    def _extract_cache(self, b: int):
+        return jax.tree.map(lambda full: np.asarray(full[:, b]), self.cache)
+
+    def _restore_cache(self, snapshot, b: int) -> None:
+        self.cache = jax.tree.map(
+            lambda full, snap: full.at[:, b].set(jnp.asarray(snap)),
+            self.cache, snapshot)
+
+    def active_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slots) if r is not None]
+
+    def num_active(self) -> int:
+        return len(self.active_slots())
+
+    def running_requests(self) -> List[Request]:
+        return [r for r in self.slots if r is not None]
+
+    # ------------------------------------------------------------------
+    # admission (request pulling LSO actuation point)
+    # ------------------------------------------------------------------
+    def can_admit(self, req: Request) -> bool:
+        if self._free_slot() is None:
+            return False
+        need = req.prompt_len + req.generated + 1
+        if need > self.cfg.max_seq_len:
+            return False
+        return self.block_mgr.can_allocate(need)
+
+    def admit(self, req: Request, extras: Optional[Dict[str, Any]] = None) -> bool:
+        """Prefill (or snapshot-restore) ``req`` into a free slot."""
+        slot = self._free_slot()
+        if slot is None or not self.can_admit(req):
+            return False
+        t0 = time.monotonic()
+        total = req.prompt_len + req.generated
+        if req.snapshot is not None:
+            # eviction resume: restore KV/state, no prefill recompute
+            self._restore_cache(req.snapshot["cache"], slot)
+            self.lengths[slot] = req.snapshot["length"]
+            req.snapshot = None
+            self.block_mgr.allocate(req.req_id, total + 1)
+            self.stats.resumes += 1
+        else:
+            tok, cache1 = self._prefill_one(np.asarray(req.prompt_tokens),
+                                            extras or req.extras or {})
+            self._insert_cache(cache1, slot)
+            self.lengths[slot] = req.prompt_len
+            self.block_mgr.allocate(req.req_id, req.prompt_len + 1)
+            if req.first_token_time is None:
+                req.first_token_time = self.clock()
+            req.output_tokens.append(tok)
+            req.generated += 1
+            self.stats.prefills += 1
+        self.slots[slot] = req
+        self.stats.prefill_time += time.monotonic() - t0
+        return True
+
+    # ------------------------------------------------------------------
+    # eviction LSO
+    # ------------------------------------------------------------------
+    def evict_slot(self, slot: int) -> Request:
+        """Snapshot the slot's KV/state to host memory and free it.
+
+        TPU adaptation of the paper's async GPU→CPU copy: ``device_get`` of
+        the slot slice (the engine overlaps this with the next decode
+        iteration when dispatch is async).
+        """
+        req = self.slots[slot]
+        assert req is not None
+        req.snapshot = {
+            "cache": self._extract_cache(slot),
+            "length": int(self.lengths[slot]),
+        }
+        req.n_evictions += 1
+        self.block_mgr.free(req.req_id)
+        self.slots[slot] = None
+        self.lengths[slot] = 0
+        self.stats.evictions += 1
+        return req
+
+    def evict_request(self, req_id: int) -> Optional[Request]:
+        for i, r in enumerate(self.slots):
+            if r is not None and r.req_id == req_id:
+                return self.evict_slot(i)
+        return None
+
+    def flush(self) -> List[Request]:
+        """Evict everything (used before a model swap)."""
+        return [self.evict_slot(i) for i in self.active_slots()]
+
+    # ------------------------------------------------------------------
+    # model swapping LSO
+    # ------------------------------------------------------------------
+    def swap_model(self, model: Model, params, model_name: str) -> List[Request]:
+        t0 = time.monotonic()
+        evicted = self.flush()
+        # swapped-out requests' snapshots belong to the OLD model: drop them
+        # (their KV is meaningless under the new weights)
+        for r in evicted:
+            r.snapshot = None
+        self.model = model
+        self.params = params
+        self.model_name = model_name
+        self.cache = model.init_cache(self.cfg.max_slots, self.cfg.max_seq_len,
+                                      self.cfg.dtype)
+        self.block_mgr.reset()
+        self._decode_fn = jax.jit(self._decode_impl)
+        self._prefill_cache.clear()
+        self.stats.model_swaps += 1
+        self.stats.swap_time += time.monotonic() - t0
+        return evicted
+
+    # ------------------------------------------------------------------
+    # one iteration
+    # ------------------------------------------------------------------
+    def take_pushback(self) -> Optional[Request]:
+        r, self._pushback = self._pushback, None
+        return r
+
+    def step(self) -> List[Request]:
+        """Admit from the pull source, then one decode iteration.
+        Returns requests completed this step."""
+        # 1. request pulling: admit while capacity allows
+        if self.pull_source is not None:
+            while self._pushback is None:
+                if self._free_slot() is None:
+                    break
+                req = self.pull_source()
+                if req is None:
+                    break
+                if not self.admit(req):
+                    # couldn't admit (KV capacity): hand back to the virtual
+                    # queue owner via take_pushback().
+                    self._pushback = req
+                    break
+
+        active = self.active_slots()
+        if not active:
+            return []
+
+        # 2. continuous-batching decode iteration
+        t0 = time.monotonic()
+        tokens = np.zeros(self.cfg.max_slots, np.int32)
+        for i in active:
+            tokens[i] = self.slots[i].output_tokens[-1] if self.slots[i].output_tokens \
+                else self.slots[i].prompt_tokens[-1]
+        next_tokens, self.cache = self._decode_fn(
+            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(self.lengths))
+        next_tokens = np.asarray(next_tokens)
+        self.stats.decode_iterations += 1
+        self.stats.decode_time += time.monotonic() - t0
+
+        done: List[Request] = []
+        now = self.clock()
+        for i in active:
+            req = self.slots[i]
+            # block accounting; preempt on OOM (vLLM-style)
+            if not self.block_mgr.append_token(req.req_id):
+                self.stats.preemptions += 1
+                self.evict_slot(i)
+                continue
+            self.lengths[i] += 1
+            tok = int(next_tokens[i])
+            req.output_tokens.append(tok)
+            req.generated += 1
+            self.stats.tokens_generated += 1
+            if req.first_token_time is None:
+                req.first_token_time = now
+            eos = (self.cfg.eos_token is not None and tok == self.cfg.eos_token)
+            if eos or req.generated >= req.max_new_tokens \
+                    or self.lengths[i] >= self.cfg.max_seq_len - 1:
+                req.completion_time = now
+                done.append(req)
+                self.block_mgr.free(req.req_id)
+                self.slots[i] = None
+                self.lengths[i] = 0
+        self.completed.extend(done)
+        return done
+
+    # ------------------------------------------------------------------
+    # profiling (feeds the RWT estimator + simulator)
+    # ------------------------------------------------------------------
+    def profile(self, prompts: List[np.ndarray], max_new_tokens: int = 32) -> Dict[str, float]:
+        """Run one batch (paper §6 "Hardware Profiling": a single batch run)
+        and return {prefill_time P, decode_per_token d, throughput theta}."""
+        import repro.core.request as req_mod
+        reqs = [req_mod.Request(prompt_tokens=p, model=self.model_name,
+                                slo=1e9, max_new_tokens=max_new_tokens)
+                for p in prompts]
+        t0 = time.monotonic()
+        for r in reqs:
+            if not self.admit(r):
+                break
+        prefill_t = time.monotonic() - t0
+        n_admitted = self.num_active()
+        t0 = time.monotonic()
+        iters = 0
+        toks0 = self.stats.tokens_generated
+        while self.num_active() > 0:
+            self.step()
+            iters += 1
+        decode_t = time.monotonic() - t0
+        tokens = self.stats.tokens_generated - toks0
+        return {
+            "prefill_time": prefill_t / max(n_admitted, 1),
+            "decode_per_token": decode_t / max(iters, 1),
+            "throughput": tokens / max(decode_t, 1e-9),
+            "batch_size": float(n_admitted),
+        }

@@ -1,0 +1,100 @@
+"""Paged KV-cache block manager (PagedAttention-style accounting).
+
+On TPU the KV pages are dense HBM arrays indexed by block tables; this
+manager owns the **allocation state machine** the iteration scheduler uses
+for admission / preemption decisions: a free list of fixed-size blocks, a
+per-sequence block table, and token-capacity queries.  The paper's RWT
+estimator consumes ``GPU`` (total token capacity) from here (Appendix A.1,
+Eq. 16).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+
+class OutOfBlocksError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class SeqAlloc:
+    block_table: List[int]
+    num_tokens: int
+
+
+class BlockManager:
+    def __init__(self, num_blocks: int, block_size: int = 16,
+                 watermark: float = 0.01):
+        assert num_blocks > 0 and block_size > 0
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        # reserve a small watermark so decode appends don't immediately OOM
+        self.watermark_blocks = max(1, int(num_blocks * watermark))
+        self._free: List[int] = list(range(num_blocks))
+        self._seqs: Dict[int, SeqAlloc] = {}
+
+    # ------------------------------------------------------------------
+    @property
+    def token_capacity(self) -> int:
+        return self.num_blocks * self.block_size
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def tokens_allocated(self) -> int:
+        return sum(s.num_tokens for s in self._seqs.values())
+
+    def blocks_needed(self, num_tokens: int) -> int:
+        return -(-num_tokens // self.block_size)
+
+    def can_allocate(self, num_tokens: int, *, respect_watermark: bool = True) -> bool:
+        need = self.blocks_needed(num_tokens)
+        reserve = self.watermark_blocks if respect_watermark else 0
+        return need <= len(self._free) - reserve
+
+    # ------------------------------------------------------------------
+    def allocate(self, seq_id: int, num_tokens: int) -> List[int]:
+        if seq_id in self._seqs:
+            raise KeyError(f"seq {seq_id} already allocated")
+        need = self.blocks_needed(num_tokens)
+        if need > len(self._free):
+            raise OutOfBlocksError(
+                f"need {need} blocks, {len(self._free)} free")
+        blocks = [self._free.pop() for _ in range(need)]
+        self._seqs[seq_id] = SeqAlloc(block_table=blocks, num_tokens=num_tokens)
+        return blocks
+
+    def append_token(self, seq_id: int) -> bool:
+        """Account one more token; returns False if a new block was needed
+        but none was free (caller must preempt)."""
+        alloc = self._seqs[seq_id]
+        if alloc.num_tokens % self.block_size == 0:
+            if not self._free:
+                return False
+            alloc.block_table.append(self._free.pop())
+        alloc.num_tokens += 1
+        return True
+
+    def free(self, seq_id: int) -> None:
+        alloc = self._seqs.pop(seq_id, None)
+        if alloc is not None:
+            self._free.extend(alloc.block_table)
+
+    def block_table(self, seq_id: int) -> List[int]:
+        return list(self._seqs[seq_id].block_table)
+
+    def seq_tokens(self, seq_id: int) -> int:
+        return self._seqs[seq_id].num_tokens
+
+    def has(self, seq_id: int) -> bool:
+        return seq_id in self._seqs
+
+    def reset(self) -> None:
+        self._free = list(range(self.num_blocks))
+        self._seqs.clear()

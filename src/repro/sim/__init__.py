@@ -1,0 +1,5 @@
+from repro.sim.profiles import DEVICE_PROFILES, calibrate_from_engine, profiles_for
+from repro.sim.simulator import ClusterSimulator, SimInstance
+
+__all__ = ["ClusterSimulator", "SimInstance", "DEVICE_PROFILES",
+           "calibrate_from_engine", "profiles_for"]

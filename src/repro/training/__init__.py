@@ -1,0 +1,7 @@
+from repro.training.checkpoint import restore_checkpoint, save_checkpoint
+from repro.training.data_pipeline import SyntheticLMDataset
+from repro.training.optimizer import AdamW, cosine_schedule, global_norm
+from repro.training.train_step import make_train_step
+
+__all__ = ["AdamW", "cosine_schedule", "global_norm", "make_train_step",
+           "save_checkpoint", "restore_checkpoint", "SyntheticLMDataset"]

@@ -1,0 +1,42 @@
+"""Minimal npz + JSON-manifest checkpointing for params/opt state."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in leaves_with_path:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, params, opt_state=None, step: int = 0,
+                    metadata: Dict[str, Any] | None = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    np.savez(os.path.join(path, "params.npz"), **_flatten(params))
+    if opt_state is not None:
+        np.savez(os.path.join(path, "opt_state.npz"), **_flatten(opt_state))
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump({"step": step, "metadata": metadata or {}}, f)
+
+
+def restore_checkpoint(path: str, params_template) -> Tuple[Any, int]:
+    """Restores into the treedef of ``params_template``."""
+    data = np.load(os.path.join(path, "params.npz"))
+    flat_template = _flatten(params_template)
+    assert set(data.files) == set(flat_template), "checkpoint/template mismatch"
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(params_template)
+    keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            for path, _ in leaves_with_path]
+    restored = [data[k] for k in keys]
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    return jax.tree_util.tree_unflatten(treedef, restored), manifest["step"]

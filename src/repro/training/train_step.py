@@ -1,0 +1,63 @@
+"""Training step factory: loss + AdamW + (optional) microbatch gradient
+accumulation, built per architecture from the model factory."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_factory import Model
+from repro.training.optimizer import AdamW, AdamWState, global_norm
+
+
+def make_train_step(model: Model, opt: AdamW, *, microbatches: int = 1,
+                    remat: bool = True):
+    """Returns ``train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics)``.
+
+    With ``microbatches > 1`` the global batch is split on axis 0 and
+    gradients are accumulated in a ``lax.scan`` — the standard memory-vs-
+    time knob for the big dense archs (see EXPERIMENTS §Perf).
+    """
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, remat=remat)
+
+    def single(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = jax.tree.map(lambda p, u: p + u, params, updates)
+        metrics = dict(metrics, loss=loss, grad_norm=global_norm(grads))
+        return params, opt_state, metrics
+
+    if microbatches == 1:
+        return single
+
+    def accumulated(params, opt_state, batch):
+        def split(x):
+            b = x.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+        def body(carry, mb):
+            acc, loss_acc = carry
+            (loss, _), grads = grad_fn(params, mb)
+            acc = jax.tree.map(lambda a, g: a + g, acc, grads)
+            return (acc, loss_acc + loss), None
+
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        (grads, loss_sum), _ = jax.lax.scan(body, (zeros, jnp.float32(0.0)), micro)
+        grads = jax.tree.map(lambda g: g / microbatches, grads)
+        loss = loss_sum / microbatches
+        updates, new_opt_state = opt.update(grads, opt_state, params)
+        new_params = jax.tree.map(lambda p, u: p + u, params, updates)
+        metrics = {"loss": loss, "grad_norm": global_norm(grads),
+                   "ce": loss, "aux": jnp.float32(0.0)}
+        return new_params, new_opt_state, metrics
+
+    return accumulated

@@ -1,0 +1,13 @@
+import os
+
+# Tests run on the single real CPU device (the 512-device override is ONLY
+# for the dry-run, set inside repro.launch.dryrun before jax import).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.key(0)

@@ -1,0 +1,75 @@
+"""Architecture registry: exact assigned configs + reduced-variant rules."""
+import pytest
+
+from repro.configs import ARCHITECTURES, INPUT_SHAPES, get_arch, shape_applicable
+
+EXPECTED = {
+    # name: (arch_type, layers, d_model, heads, kv, d_ff, vocab)
+    "granite-3-2b": ("dense", 40, 2048, 32, 8, 8192, 49155),
+    "qwen3-moe-30b-a3b": ("moe", 48, 2048, 32, 4, 768, 151936),
+    "h2o-danube-1.8b": ("dense", 24, 2560, 32, 8, 6912, 32000),
+    "deepseek-67b": ("dense", 95, 8192, 64, 8, 22016, 102400),
+    "zamba2-1.2b": ("hybrid", 38, 2048, 32, 32, 8192, 32000),
+    "qwen1.5-32b": ("dense", 64, 5120, 40, 40, 27392, 152064),
+    "mamba2-130m": ("ssm", 24, 768, 0, 0, 0, 50280),
+    "llava-next-34b": ("vlm", 60, 7168, 56, 8, 20480, 64000),
+    "dbrx-132b": ("moe", 40, 6144, 48, 8, 10752, 100352),
+    "whisper-medium": ("audio", 24, 1024, 16, 16, 4096, 51865),
+}
+
+
+def test_all_ten_assigned():
+    assert set(ARCHITECTURES) == set(EXPECTED)
+
+
+@pytest.mark.parametrize("name", sorted(EXPECTED))
+def test_exact_config(name):
+    t, L, d, h, kv, ff, v = EXPECTED[name]
+    c = get_arch(name)
+    assert (c.arch_type, c.num_layers, c.d_model, c.num_heads,
+            c.num_kv_heads, c.d_ff, c.vocab_size) == (t, L, d, h, kv, ff, v)
+    assert c.source, "every config must cite its source"
+
+
+@pytest.mark.parametrize("name,expected_b", [
+    ("granite-3-2b", 2.5), ("qwen3-moe-30b-a3b", 30.5), ("deepseek-67b", 67.4),
+    ("dbrx-132b", 131.6), ("mamba2-130m", 0.13), ("whisper-medium", 1.0),
+])
+def test_param_counts_near_published(name, expected_b):
+    got = get_arch(name).param_count() / 1e9
+    assert abs(got - expected_b) / expected_b < 0.15, (name, got)
+
+
+def test_moe_active_params():
+    c = get_arch("qwen3-moe-30b-a3b")
+    assert c.moe.num_experts == 128 and c.moe.experts_per_token == 8
+    active = c.active_param_count() / 1e9
+    assert 2.5 < active < 4.5  # "A3B" ≈ 3B active
+    d = get_arch("dbrx-132b")
+    assert d.moe.num_experts == 16 and d.moe.experts_per_token == 4
+    assert 30 < d.active_param_count() / 1e9 < 45  # ~36B active
+
+
+@pytest.mark.parametrize("name", sorted(EXPECTED))
+def test_reduced_constraints(name):
+    r = get_arch(name).reduced()
+    assert r.num_layers <= 2 and r.d_model <= 512
+    if r.moe is not None:
+        assert r.moe.num_experts <= 4
+    assert r.arch_type == get_arch(name).arch_type  # same family
+
+
+def test_long_context_applicability():
+    long = [s for s in INPUT_SHAPES if s.name == "long_500k"][0]
+    runs = {n for n in ARCHITECTURES if shape_applicable(get_arch(n), long)}
+    assert runs == {"mamba2-130m", "zamba2-1.2b", "h2o-danube-1.8b"}
+    # everything else runs all other shapes
+    for s in INPUT_SHAPES:
+        if s.name != "long_500k":
+            assert all(shape_applicable(get_arch(n), s) for n in ARCHITECTURES)
+
+
+def test_padded_vocab_divisible_by_256():
+    for c in ARCHITECTURES.values():
+        assert c.padded_vocab % 256 == 0
+        assert 0 <= c.padded_vocab - c.vocab_size < 256

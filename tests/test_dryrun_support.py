@@ -1,0 +1,99 @@
+"""Dry-run support: input_specs shapes, HLO collective parsing, workload
+generators (unit-level — the 512-device sweep itself runs via
+``python -m repro.launch.dryrun``)."""
+import numpy as np
+import pytest
+
+from repro.configs import ARCHITECTURES, INPUT_SHAPES, get_arch, get_shape
+from repro.launch.hlo_analysis import collective_stats
+from repro.models.model_factory import batch_struct
+
+
+def test_batch_struct_train_shapes():
+    cfg = get_arch("granite-3-2b")
+    b = batch_struct(cfg, 256, 4096, "train")
+    assert b["tokens"].shape == (256, 4097)
+
+
+def test_batch_struct_vlm_includes_patches():
+    cfg = get_arch("llava-next-34b")
+    b = batch_struct(cfg, 32, 32768, "prefill")
+    assert "patch_embeds" in b
+    assert b["patch_embeds"].shape == (32, 2880, 7168)
+    assert b["tokens"].shape[1] + 2880 == 32768
+
+
+def test_batch_struct_audio_includes_frames():
+    cfg = get_arch("whisper-medium")
+    b = batch_struct(cfg, 256, 4096, "train")
+    assert b["frame_embeds"].shape == (256, 1500, 1024)
+
+
+def test_batch_struct_decode():
+    cfg = get_arch("deepseek-67b")
+    b = batch_struct(cfg, 128, 32768, "decode")
+    assert b["tokens"].shape == (128,)
+    assert b["lengths"].shape == (128,)
+
+
+def test_assigned_shapes_exact():
+    names = {(s.name, s.seq_len, s.global_batch, s.kind) for s in INPUT_SHAPES}
+    assert names == {
+        ("train_4k", 4096, 256, "train"),
+        ("prefill_32k", 32768, 32, "prefill"),
+        ("decode_32k", 32768, 128, "decode"),
+        ("long_500k", 524288, 1, "decode"),
+    }
+
+
+HLO_SAMPLE = """
+ENTRY %main {
+  %ag = bf16[16,4096]{1,0} all-gather(bf16[1,4096]{1,0} %x), replica_groups={...}
+  %ar = f32[256]{0} all-reduce(f32[256]{0} %y), to_apply=%sum
+  %ars = f32[2,8]{1,0} all-reduce-start(f32[2,8]{1,0} %z), to_apply=%sum
+  %ard = f32[2,8]{1,0} all-reduce-done(f32[2,8]{1,0} %ars)
+  %rs = bf16[2,2048]{1,0} reduce-scatter(bf16[2,32768]{1,0} %w), dimensions={1}
+  %a2a = f32[4,64]{1,0} all-to-all(f32[4,64]{1,0} %v), dimensions={0}
+  %cp = u32[8]{0} collective-permute(u32[8]{0} %u), source_target_pairs={{0,1}}
+}
+"""
+
+
+def test_collective_parsing_counts_and_bytes():
+    st = collective_stats(HLO_SAMPLE)
+    assert st.count_by_op["all-gather"] == 1
+    assert st.count_by_op["all-reduce"] == 2          # plain + -start
+    assert st.count_by_op["reduce-scatter"] == 1
+    assert st.count_by_op["all-to-all"] == 1
+    assert st.count_by_op["collective-permute"] == 1
+    assert st.bytes_by_op["all-gather"] == 16 * 4096 * 2
+    assert st.bytes_by_op["all-reduce"] == 256 * 4 + 2 * 8 * 4
+    assert st.bytes_by_op["reduce-scatter"] == 2 * 2048 * 2
+
+
+def test_workload_generators():
+    from repro.data.workload import workload_a, workload_b, workload_c
+    wa = workload_a(arrival_rate=10, n_requests=200, seed=0)
+    assert len(wa) == 200
+    arr = [r.arrival_time for r in wa]
+    assert arr == sorted(arr)
+    assert {r.slo_class for r in wa} == {"interactive", "batch1", "batch2"}
+
+    wb = workload_b(arrival_rate=10, n_requests=200, seed=0)
+    assert len({r.model for r in wb}) == 5  # multi-model
+
+    wc = workload_c(arrival_rate=10, n_requests=400, seed=0, mega_fraction=0.2)
+    totals = [r.prompt_len + r.max_new_tokens for r in wc]
+    mega = [t for t in totals if t >= 2800]
+    assert len(mega) > 20  # mega prompts present (3k-4k band)
+    assert max(totals) <= 4200
+
+
+def test_sharegpt_distribution_moments():
+    from repro.data.sharegpt_synth import sample_lengths
+    rng = np.random.default_rng(0)
+    ins, outs = sample_lengths(rng, 20_000)
+    # Fig. 8-like: output median much larger than input median, heavy tails
+    assert 25 < np.median(ins) < 90
+    assert 100 < np.median(outs) < 300
+    assert ins.max() <= 2048 and outs.max() <= 2048

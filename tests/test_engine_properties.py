@@ -1,0 +1,64 @@
+"""Property-based stress test: random interleavings of engine operations
+must preserve the block-accounting and slot invariants."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.configs import ARCHITECTURES
+from repro.core.request import Request
+from repro.models import build_model
+from repro.serving import ContinuousBatchingEngine, EngineConfig
+
+_cfg = ARCHITECTURES["granite-3-2b"].reduced(num_layers=1, d_model=64)
+_model = build_model(_cfg)
+_params = _model.init(jax.random.key(0))
+
+
+def _invariants(eng: ContinuousBatchingEngine):
+    bm = eng.block_mgr
+    assert bm.free_blocks + bm.used_blocks == bm.num_blocks
+    active = [r for r in eng.slots if r is not None]
+    # every active slot has an allocation; every allocation has a slot
+    for r in active:
+        assert bm.has(r.req_id)
+    assert len(active) == len(bm._seqs)
+    # lengths nonzero iff slot active
+    for i, r in enumerate(eng.slots):
+        if r is None:
+            assert eng.lengths[i] == 0
+        else:
+            assert eng.lengths[i] >= r.prompt_len
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(ops=st.lists(st.sampled_from(["admit", "step", "evict", "step", "step"]),
+                    min_size=1, max_size=25),
+       seed=st.integers(0, 2**16))
+def test_engine_invariants_under_random_ops(ops, seed):
+    rng = np.random.default_rng(seed)
+    eng = ContinuousBatchingEngine(
+        _model, _params, EngineConfig(max_slots=3, max_seq_len=48,
+                                      kv_blocks=12, block_size=4))
+    live = []
+    for op in ops:
+        if op == "admit":
+            r = Request(prompt_tokens=rng.integers(0, 64, size=int(rng.integers(2, 8))).tolist(),
+                        model="m", slo=1e9, max_new_tokens=int(rng.integers(2, 10)))
+            if eng.can_admit(r):
+                eng.admit(r)
+                live.append(r)
+        elif op == "evict" and eng.active_slots():
+            slot = int(rng.choice(eng.active_slots()))
+            eng.evict_slot(slot)
+        else:
+            eng.step()
+        _invariants(eng)
+    # drain: everything admittable finishes eventually
+    for _ in range(200):
+        if eng.num_active() == 0:
+            break
+        eng.step()
+        _invariants(eng)
+    assert eng.block_mgr.used_blocks == 0 or eng.num_active() > 0

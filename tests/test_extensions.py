@@ -1,0 +1,96 @@
+"""§9 extensions: strict priorities, admission control, scale-up search,
+ITL tracking."""
+import numpy as np
+import pytest
+
+from repro.core.autoscale import AdmissionController, find_min_instances
+from repro.core.global_scheduler import InstanceInfo
+from repro.core.priority import PriorityScheduler
+from repro.core.request import Request, make_request
+from repro.core.request_group import RequestGroup
+from repro.core.rwt_estimator import HardwareProfile, RWTEstimator
+from repro.core.virtual_queue import VirtualQueue
+
+HW = HardwareProfile(prefill_time=0.1, decode_per_token=0.04,
+                     inefficiency=1.2, token_capacity=60_000, swap_time=2.0)
+
+
+def _group(model, slo, priority=0, n=4):
+    g = RequestGroup(model=model, slo=slo)
+    for i in range(n):
+        r = make_request(list(range(20)), model, "batch1", arrival_time=0.0)
+        r.slo = slo
+        r.priority = priority
+        g.add(r)
+    return g
+
+
+def test_priority_scheduler_orders_levels_strictly():
+    vq = VirtualQueue(0)
+    inst = InstanceInfo(0, {"m": HW}, "m", vq)
+    # low-priority group has the TIGHTER deadline: plain EDF would put it
+    # first, strict priority must not.
+    g_low = _group("m", slo=5.0, priority=1)
+    g_high = _group("m", slo=500.0, priority=0)
+    sched = PriorityScheduler()
+    sched.schedule([g_low, g_high], [inst], now=0.0)
+    order = [g.group_id for g in vq.groups]
+    assert order.index(g_high.group_id) < order.index(g_low.group_id)
+
+
+def test_priority_scheduler_optimizes_within_level():
+    vq = VirtualQueue(0)
+    inst = InstanceInfo(0, {"a": HW, "b": HW}, "a", vq)
+    # same priority, interleaved models: solver should group same-model
+    gs = [_group("a", 100.0), _group("b", 102.0), _group("a", 104.0),
+          _group("b", 106.0)]
+    sched = PriorityScheduler(exact_threshold=7)
+    sched.schedule(gs, [inst], now=0.0)
+    ms = vq.models_in_order()
+    switches = sum(1 for i in range(1, len(ms)) if ms[i] != ms[i - 1])
+    assert switches <= 2  # EDF interleave would be 3
+
+
+def test_admission_controller_rejects_when_drain_exceeds_bound():
+    ac = AdmissionController(RWTEstimator(), HW, max_drain_s=10.0)
+    r = make_request(list(range(20)), "m", "interactive")
+    assert ac.admit(r, queue_pending_requests=0)
+    assert not ac.admit(r, queue_pending_requests=100_000)
+    assert len(ac.rejected) == 1
+
+
+def test_find_min_instances_binary_search():
+    calls = []
+
+    def run_with_n(n):
+        calls.append(n)
+        return {"slo_attainment": 1.0 if n >= 5 else 0.5}
+
+    res = find_min_instances(run_with_n, slo_target=0.9, lo=1, hi=16)
+    assert res["min_instances"] == 5
+    assert len(calls) <= 6  # logarithmic
+
+
+def test_find_min_instances_infeasible():
+    res = find_min_instances(lambda n: {"slo_attainment": 0.1},
+                             slo_target=0.9, lo=1, hi=4)
+    assert res["min_instances"] is None
+
+
+def test_itl_tracking():
+    r = Request(prompt_tokens=[1, 2], model="m", slo=10.0)
+    assert r.itl() is None
+    r.first_token_time = 1.0
+    r.completion_time = 3.0
+    r.generated = 5
+    assert r.itl() == pytest.approx(0.5)
+
+
+def test_sim_reports_itl():
+    from repro.data.workload import workload_a
+    from repro.sim import ClusterSimulator, profiles_for
+    reqs = workload_a(arrival_rate=5, n_requests=60, seed=0)
+    sim = ClusterSimulator([profiles_for("a100", ["vicuna-13b"])], "qlm")
+    m = sim.run(reqs)
+    # ITL ≈ decode_per_token (0.04) + admission-interleave overhead
+    assert 0.03 <= m["mean_itl"] <= 0.12, m["mean_itl"]

@@ -1,0 +1,96 @@
+"""Per-kernel allclose vs the pure-jnp oracle, swept over shapes/dtypes
+(interpret=True executes the Pallas kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,KVH,Lq,Lkv,D,bq,bk", [
+    (1, 4, 4, 64, 64, 32, 32, 32),     # MHA square
+    (2, 8, 2, 100, 100, 64, 32, 32),   # GQA, non-multiple lengths (padding)
+    (1, 4, 1, 33, 65, 16, 16, 16),     # MQA, ragged
+])
+def test_flash_attention_causal(B, H, KVH, Lq, Lkv, D, bq, bk, dtype):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, H, Lq, D), dtype)
+    k = jax.random.normal(ks[1], (B, KVH, Lkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, KVH, Lkv, D), dtype)
+    out = ops.flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("window", [8, 17, 64])
+def test_flash_attention_sliding_window(window):
+    ks = jax.random.split(jax.random.key(1), 3)
+    B, H, KVH, L, D = 2, 4, 2, 80, 32
+    q = jax.random.normal(ks[0], (B, H, L, D))
+    k = jax.random.normal(ks[1], (B, KVH, L, D))
+    v = jax.random.normal(ks[2], (B, KVH, L, D))
+    out = ops.flash_attention(q, k, v, causal=True, window=window,
+                              block_q=16, block_k=16)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,KVH,S,D,bk", [
+    (2, 8, 2, 300, 64, 64),
+    (1, 4, 4, 17, 32, 8),
+    (3, 6, 1, 128, 16, 32),
+])
+def test_decode_attention(B, H, KVH, S, D, bk, dtype):
+    ks = jax.random.split(jax.random.key(2), 4)
+    q = jax.random.normal(ks[0], (B, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, KVH, S, D), dtype)
+    v = jax.random.normal(ks[2], (B, KVH, S, D), dtype)
+    lengths = jax.random.randint(ks[3], (B,), 1, S + 1, jnp.int32)
+    out = ops.decode_attention(q, k, v, lengths, block_k=bk)
+    want = ref.decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_decode_attention_respects_lengths():
+    """Tokens beyond `lengths` must not influence the output."""
+    ks = jax.random.split(jax.random.key(3), 3)
+    B, H, KVH, S, D = 1, 2, 2, 64, 16
+    q = jax.random.normal(ks[0], (B, H, D))
+    k = jax.random.normal(ks[1], (B, KVH, S, D))
+    v = jax.random.normal(ks[2], (B, KVH, S, D))
+    lengths = jnp.array([20], jnp.int32)
+    out1 = ops.decode_attention(q, k, v, lengths)
+    k2 = k.at[:, :, 20:].set(999.0)
+    v2 = v.at[:, :, 20:].set(-999.0)
+    out2 = ops.decode_attention(q, k2, v2, lengths)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+@pytest.mark.parametrize("B,L,H,P,G,N,chunk", [
+    (1, 64, 2, 16, 1, 8, 16),
+    (2, 128, 4, 32, 2, 16, 32),
+    (1, 32, 8, 8, 4, 4, 8),
+])
+def test_ssd_scan_kernel(B, L, H, P, G, N, chunk, dtype):
+    ks = jax.random.split(jax.random.key(4), 5)
+    x = jax.random.normal(ks[0], (B, L, H, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, H))).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, L, G, N), dtype)
+    Cm = jax.random.normal(ks[4], (B, L, G, N), dtype)
+    out = ops.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk)
+    want = ref.ssd_scan_ref(x, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=5e-4, atol=5e-4)

@@ -1,0 +1,66 @@
+"""BlockManager unit + property tests (paged-KV accounting invariants)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.kv_cache import BlockManager, OutOfBlocksError
+
+
+def test_basic_alloc_free():
+    bm = BlockManager(num_blocks=10, block_size=4)
+    assert bm.token_capacity == 40
+    blocks = bm.allocate(1, 9)  # 3 blocks
+    assert len(blocks) == 3 and bm.free_blocks == 7
+    bm.free(1)
+    assert bm.free_blocks == 10
+
+
+def test_append_token_grows_blocks():
+    bm = BlockManager(num_blocks=3, block_size=2)
+    bm.allocate(1, 2)  # exactly 1 block
+    assert bm.append_token(1)      # needs a 2nd block
+    assert bm.free_blocks == 1
+    assert bm.append_token(1)      # fits in block 2
+    assert bm.append_token(1)      # needs 3rd block
+    assert bm.free_blocks == 0
+    assert bm.append_token(1)      # fits
+    assert not bm.append_token(1)  # OOM -> caller preempts
+
+
+def test_out_of_blocks_raises():
+    bm = BlockManager(num_blocks=2, block_size=4)
+    with pytest.raises(OutOfBlocksError):
+        bm.allocate(1, 100)
+
+
+def test_watermark_respected():
+    bm = BlockManager(num_blocks=100, block_size=1, watermark=0.1)
+    assert bm.can_allocate(90)
+    assert not bm.can_allocate(91)
+    assert bm.can_allocate(100, respect_watermark=False)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "append", "free"]),
+                          st.integers(0, 7), st.integers(1, 30)),
+                max_size=60))
+def test_accounting_invariants(ops):
+    """free + used == total; token accounting matches block tables."""
+    bm = BlockManager(num_blocks=16, block_size=4)
+    for op, sid, ntok in ops:
+        if op == "alloc" and not bm.has(sid):
+            if bm.blocks_needed(ntok) <= bm.free_blocks:
+                bm.allocate(sid, ntok)
+        elif op == "append" and bm.has(sid):
+            bm.append_token(sid)
+        elif op == "free":
+            bm.free(sid)
+        assert bm.free_blocks + bm.used_blocks == bm.num_blocks
+        for s in list(bm._seqs):
+            alloc = bm._seqs[s]
+            assert len(alloc.block_table) == bm.blocks_needed(alloc.num_tokens) \
+                or alloc.num_tokens % bm.block_size == 0
+            assert alloc.num_tokens <= len(alloc.block_table) * bm.block_size
+        # no block is double-owned
+        owned = [b for s in bm._seqs.values() for b in s.block_table]
+        assert len(owned) == len(set(owned))
+        assert not (set(owned) & set(bm._free))

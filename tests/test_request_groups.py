@@ -1,0 +1,97 @@
+"""Request-group formation (paper §4, Algorithm 1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.request import make_request
+from repro.core.request_group import (classify_into_groups,
+                                      create_request_groups)
+
+
+def _reqs(n, models=("m1",), classes=("interactive", "batch1", "batch2"),
+          seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        out.append(make_request(
+            prompt_tokens=list(range(int(rng.integers(4, 200)))),
+            model=str(rng.choice(models)),
+            slo_class=str(rng.choice(classes)),
+            arrival_time=float(i),
+            max_new_tokens=int(rng.integers(16, 400))))
+    return out
+
+
+def test_groups_are_model_pure():
+    reqs = _reqs(200, models=("m1", "m2", "m3"))
+    groups = create_request_groups(reqs, avg_batch_size=16, delta=2)
+    for g in groups:
+        assert all(r.model == g.model for r in g.requests)
+
+
+def test_split_respects_max_size():
+    """Algorithm 1 lines 2–7: no group exceeds avg_batch_size × δ."""
+    reqs = _reqs(500, classes=("batch1",))
+    groups = create_request_groups(reqs, avg_batch_size=16, delta=2)
+    for g in groups:
+        assert g.size() <= 32
+
+
+def test_every_request_in_exactly_one_group():
+    reqs = _reqs(300, models=("m1", "m2"))
+    groups = create_request_groups(reqs, avg_batch_size=16, delta=4)
+    seen = [r.req_id for g in groups for r in g.requests]
+    assert sorted(seen) == sorted(r.req_id for r in reqs)
+
+
+def test_fcfs_within_group():
+    reqs = _reqs(100)
+    groups = create_request_groups(reqs, avg_batch_size=8, delta=2)
+    for g in groups:
+        arrivals = [r.arrival_time for r in g.requests]
+        assert arrivals == sorted(arrivals)
+
+
+def test_slo_classes_tend_to_separate():
+    """Clustering on (log SLO, lengths) should not mix 20 s interactive with
+    1 h batch in the same group (3 decades apart in feature space)."""
+    reqs = _reqs(200, classes=("interactive", "batch2"))
+    groups = create_request_groups(reqs, avg_batch_size=16, delta=4)
+    mixed = sum(1 for g in groups
+                if len({r.slo_class for r in g.requests}) > 1)
+    assert mixed <= len(groups) // 4
+
+
+def test_classify_attaches_to_compatible_group():
+    reqs = _reqs(50, models=("m1",), classes=("batch1",))
+    groups = create_request_groups(reqs, avg_batch_size=16, delta=4)
+    r = make_request(list(range(50)), "m1", "batch1", arrival_time=99.0)
+    g = classify_into_groups(r, groups, max_group=64)
+    assert g is not None and r in g.requests
+    r2 = make_request(list(range(50)), "OTHER", "batch1", arrival_time=99.0)
+    assert classify_into_groups(r2, groups, max_group=64) is None
+
+
+def test_group_cursor_done_semantics():
+    reqs = _reqs(10, classes=("batch1",))
+    groups = create_request_groups(reqs, avg_batch_size=16, delta=4)
+    g = groups[0]
+    assert not g.done()
+    for r in g.requests:
+        r.completion_time = 1.0
+        r.first_token_time = 0.5
+    assert g.done()
+    assert g.next_pending() is None
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 120), batch=st.integers(1, 32),
+       delta=st.floats(1.0, 8.0), seed=st.integers(0, 999))
+def test_algorithm1_properties(n, batch, delta, seed):
+    reqs = _reqs(n, models=("m1", "m2"), seed=seed)
+    groups = create_request_groups(reqs, avg_batch_size=batch, delta=delta,
+                                   seed=seed)
+    max_group = max(1, int(batch * delta))
+    assert all(g.size() <= max_group for g in groups)
+    assert sum(g.size() for g in groups) == n
+    assert all(len({r.model for r in g.requests}) == 1 for g in groups)

@@ -1,0 +1,111 @@
+"""RWT estimator (paper §6 + Appendix A.1): closed-form checks, CLT
+accuracy-vs-queue-size property (Fig. 18), conservativeness for short
+queues (§9)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.rwt_estimator import (HardwareProfile, RWTEstimator,
+                                      WorkloadProfile)
+
+HW = HardwareProfile(prefill_time=0.2, decode_per_token=0.04,
+                     inefficiency=1.2, token_capacity=60_000,
+                     swap_time=2.0, model_max_tokens=512)
+WL = WorkloadProfile(mu_input=45.0, sigma_input=30.0,
+                     mu_output=160.0, sigma_output=80.0)
+
+
+def test_throughput_formula():
+    # Eq. 16: B = GPU / E[I+O];  Eq. 15: Θ = B / (d ε)
+    B = 60_000 / (45 + 160)
+    theta = B / (0.04 * 1.2)
+    assert math.isclose(HW.throughput(WL), theta, rel_tol=1e-9)
+
+
+def test_waiting_time_linear_in_queue_position():
+    est = RWTEstimator()
+    w1 = est.waiting_time(10, WL, HW)
+    w2 = est.waiting_time(20, WL, HW)
+    assert math.isclose(w2.mean, 2 * w1.mean, rel_tol=1e-9)
+    # std grows as sqrt(q) (Eq. 3)
+    assert math.isclose(w2.std, math.sqrt(2) * w1.std, rel_tol=1e-9)
+
+
+def test_completion_adds_prefill_and_conservative_decode():
+    est = RWTEstimator()
+    c = est.request_completion(0, WL, HW)
+    assert math.isclose(c.mean, 0.2 + 512 * 1.2 * 0.04, rel_tol=1e-9)
+
+
+def _simulate_queue_waits(n_requests, rng, batch=None):
+    """Token-granular single-instance FCFS continuous batching — ground
+    truth the estimator is judged against."""
+    outs = np.clip(rng.lognormal(math.log(WL.mu_output) - 0.125, 0.5,
+                                 n_requests), 1, 2048).astype(int)
+    ins = np.full(n_requests, WL.mu_input)
+    B = int(HW.token_capacity / (WL.mu_input + WL.mu_output)) if batch is None else batch
+    d = HW.decode_per_token
+    t = 0.0
+    waits = np.zeros(n_requests)
+    running = []  # remaining outputs
+    next_idx = 0
+    while next_idx < n_requests or running:
+        while next_idx < n_requests and len(running) < B:
+            waits[next_idx] = t
+            running.append(outs[next_idx])
+            next_idx += 1
+        t += d
+        running = [r - 1 for r in running if r > 1]
+    return waits, outs
+
+
+def test_accuracy_improves_with_queue_size():
+    """Fig. 18: R² of the waiting-time estimate rises with queue length."""
+    est = RWTEstimator(z_conservative=0.0)
+    rng = np.random.default_rng(0)
+    wl = WorkloadProfile(WL.mu_input, 0.0, float(np.mean(
+        np.clip(rng.lognormal(math.log(WL.mu_output) - 0.125, 0.5, 50_000),
+                1, 2048))), 1.0)
+    waits, _ = _simulate_queue_waits(4000, rng)
+    theta = HW.throughput(wl) * HW.inefficiency  # sim has no ε overhead
+    preds = np.array([q * wl.mu_output / theta for q in range(4000)])
+    r2_small = RWTEstimator.r_squared(preds[:40], waits[:40])
+    r2_large = RWTEstimator.r_squared(preds, waits)
+    assert r2_large > 0.95, r2_large
+    assert r2_large >= r2_small - 1e-9
+
+
+def test_conservative_for_small_queues():
+    """§9(a): small queues => estimate >= actual (SLO-safe)."""
+    est = RWTEstimator(z_conservative=1.0)
+    rng = np.random.default_rng(1)
+    waits, _ = _simulate_queue_waits(64, rng)
+    for q in (1, 4, 8, 16):
+        c = est.request_completion(q, WL, HW)
+        assert c.conservative() + 1e-9 >= waits[q], (q, c.conservative(), waits[q])
+
+
+@settings(max_examples=40, deadline=None)
+@given(q=st.integers(0, 10_000),
+       mu=st.floats(1, 2000), sigma=st.floats(0, 500),
+       cap=st.integers(1000, 200_000))
+def test_estimator_invariants(q, mu, sigma, cap):
+    est = RWTEstimator()
+    wl = WorkloadProfile(50.0, 10.0, mu, sigma)
+    hw = HardwareProfile(0.1, 0.05, 1.2, cap)
+    w = est.waiting_time(q, wl, hw)
+    assert w.mean >= 0 and w.std >= 0
+    # monotone in queue position
+    w2 = est.waiting_time(q + 1, wl, hw)
+    assert w2.mean >= w.mean
+    # group drain scales with n
+    g1 = est.group_drain_time(10, wl, hw)
+    g2 = est.group_drain_time(20, wl, hw)
+    assert g2.mean >= g1.mean
+
+
+def test_r_squared_perfect_and_bad():
+    assert RWTEstimator.r_squared([1, 2, 3], [1, 2, 3]) == pytest.approx(1.0)
+    assert RWTEstimator.r_squared([3, 3, 3], [1, 2, 6]) < 0.5

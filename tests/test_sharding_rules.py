@@ -1,0 +1,72 @@
+"""Sharding-rule unit tests (no devices needed: spec_for only reads
+mesh.shape)."""
+from types import SimpleNamespace
+
+import pytest
+from jax.sharding import PartitionSpec
+
+from repro.distributed.sharding import DEFAULT_RULES, ShardingRules
+
+MESH = SimpleNamespace(shape={"pod": 2, "data": 16, "model": 16})
+MESH_1POD = SimpleNamespace(shape={"data": 16, "model": 16})
+
+
+def test_right_alignment_pads_stacked_dims():
+    r = ShardingRules.default()
+    # (layers, d, ff) with 2-entry logical axes -> layers replicated
+    spec = r.spec_for(MESH_1POD, (40, 2048, 8192), ("embed", "ff"))
+    assert spec == PartitionSpec(None, None, "model")
+
+
+def test_divisibility_guard_drops_axis():
+    r = ShardingRules.default()
+    spec = r.spec_for(MESH_1POD, (49155, 2048), ("vocab", "embed"), "embed")
+    assert spec == PartitionSpec(None, None)
+    assert any("vocab" in d for d in r.dropped)
+    # padded vocab shards fine
+    r2 = ShardingRules.default()
+    assert r2.spec_for(MESH_1POD, (49408, 2048), ("vocab", "embed")) == \
+        PartitionSpec("model", None)
+    assert not r2.dropped
+
+
+def test_batch_uses_pod_and_data():
+    r = ShardingRules.default()
+    spec = r.spec_for(MESH, (256, 4097), ("batch", None))
+    assert spec == PartitionSpec(("pod", "data"), None)
+    # single-pod mesh: "pod" filtered out
+    spec = r.spec_for(MESH_1POD, (256, 4097), ("batch", None))
+    assert spec == PartitionSpec("data", None)
+
+
+def test_batch_one_replicates():
+    r = ShardingRules.default()
+    spec = r.spec_for(MESH, (1,), ("batch",))
+    assert spec == PartitionSpec(None)
+
+
+def test_no_duplicate_mesh_axes():
+    r = ShardingRules({"a": "model", "b": "model"})
+    spec = r.spec_for(MESH_1POD, (32, 32), ("a", "b"))
+    flat = [x for x in spec if x is not None]
+    assert flat.count("model") == 1
+
+
+def test_overrides():
+    r = ShardingRules.default({"embed": "data"})
+    spec = r.spec_for(MESH_1POD, (4096, 8192), ("embed", "ff"))
+    assert spec == PartitionSpec("data", "model")
+
+
+def test_default_rules_cover_all_logical_axes_used_by_models():
+    import jax
+    from repro.configs import ARCHITECTURES
+    from repro.models import build_model
+    used = set()
+    for cfg in ARCHITECTURES.values():
+        m = build_model(cfg.reduced())
+        for t in (m.param_axes(), m.cache_axes()):
+            for ax in jax.tree_util.tree_leaves(t, is_leaf=lambda x: isinstance(x, tuple)):
+                used.update(a for a in ax if a is not None)
+    missing = used - set(DEFAULT_RULES)
+    assert not missing, missing

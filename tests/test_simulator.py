@@ -1,0 +1,91 @@
+"""Cluster-simulator integration: the paper's qualitative claims must hold
+(QLM > baselines on SLO attainment / throughput; swap amortization;
+eviction un-blocks interactive HOL)."""
+import pytest
+
+from repro.data.workload import workload_a, workload_b
+from repro.sim import ClusterSimulator, profiles_for
+
+WB_MODELS = ["mistral-7b-ft", "llama-70b-ft1", "vicuna-13b-ft",
+             "llama-70b-ft2", "vicuna-13b-ft2"]
+
+
+def _run(policy, reqs, models, n_inst=4, **kw):
+    profs = [profiles_for("a100", models) for _ in range(n_inst)]
+    sim = ClusterSimulator(profs, policy, **kw)
+    return sim.run(reqs)
+
+
+@pytest.fixture(scope="module")
+def multi_model_results():
+    out = {}
+    for policy in ("vllm", "edf", "shepherd", "qlm"):
+        reqs = workload_b(arrival_rate=20, n_requests=400, seed=2)
+        out[policy] = _run(policy, reqs, WB_MODELS)
+    return out
+
+
+def test_qlm_beats_baselines_on_multi_model_slo(multi_model_results):
+    r = multi_model_results
+    for base in ("vllm", "edf"):
+        assert r["qlm"]["slo_attainment"] >= r[base]["slo_attainment"], base
+    # SHEPHERD's static model partition avoids all swaps and is the closest
+    # baseline on SLO for batch-only W_B (paper Fig. 13 shows the same
+    # ordering); QLM must match it within noise AND beat its throughput.
+    assert r["qlm"]["slo_attainment"] >= r["shepherd"]["slo_attainment"] - 0.05
+    assert r["qlm"]["throughput_rps"] > r["shepherd"]["throughput_rps"]
+
+
+def test_qlm_multi_model_throughput_gain(multi_model_results):
+    """Paper Fig. 12: ~3-4x throughput vs vLLM in multi-model serving."""
+    r = multi_model_results
+    assert r["qlm"]["throughput_rps"] > 2.0 * r["vllm"]["throughput_rps"]
+
+
+def test_swap_amortization(multi_model_results):
+    """Insight #3 / Fig. 5: request groups cut model swaps by orders of
+    magnitude vs per-request FCFS/EDF interleaving."""
+    r = multi_model_results
+    assert r["qlm"]["swaps"] * 10 < r["vllm"]["swaps"]
+
+
+def test_single_model_all_complete():
+    reqs = workload_a(arrival_rate=30, n_requests=300, seed=3)
+    m = _run("qlm", reqs, ["vicuna-13b"])
+    assert m["completed"] == 300
+    assert m["slo_attainment"] > 0.9
+
+
+def test_single_model_qlm_not_worse_when_underloaded():
+    """Fig. 17 left edge: near-zero queues, QLM ≈ baselines."""
+    reqs_q = workload_a(arrival_rate=2, n_requests=100, seed=4)
+    reqs_v = workload_a(arrival_rate=2, n_requests=100, seed=4)
+    mq = _run("qlm", reqs_q, ["vicuna-13b"])
+    mv = _run("vllm", reqs_v, ["vicuna-13b"])
+    assert abs(mq["slo_attainment"] - mv["slo_attainment"]) < 0.1
+
+
+def test_eviction_unblocks_interactive_under_pressure():
+    """Insight #2: with eviction disabled, overloaded single-instance mixed
+    workloads violate more interactive SLOs."""
+    from repro.core.qlm import QLMConfig
+    res = {}
+    for evict in (True, False):
+        reqs = workload_a(arrival_rate=60, n_requests=250, seed=5)
+        profs = [profiles_for("a100", ["vicuna-13b"])]
+        sim = ClusterSimulator(profs, "qlm")
+        if not evict:
+            for inst in sim.instances:
+                inst.traits = inst.traits.__class__(
+                    **{**inst.traits.__dict__, "uses_eviction": False})
+        res[evict] = sim.run(reqs)
+    assert res[True]["slo_attainment"] >= res[False]["slo_attainment"]
+
+
+def test_metrics_sanity():
+    reqs = workload_a(arrival_rate=10, n_requests=120, seed=6)
+    m = _run("qlm", reqs, ["vicuna-13b"], n_inst=2)
+    assert 0 <= m["slo_attainment"] <= 1
+    assert m["device_utilization"] >= 0
+    assert m["makespan"] > 0
+    assert m["token_throughput"] > 0

@@ -1,0 +1,49 @@
+"""End-to-end behaviour tests for the reproduced system (QLM, SoCC'24).
+
+The headline claims, executed on the discrete-event cluster (calibrated
+profiles) and cross-checked against the real-engine stack in
+test_qlm_integration.py.
+"""
+import pytest
+
+from repro.core.policies import make_policy
+from repro.data.workload import workload_a, workload_b
+from repro.sim import ClusterSimulator, profiles_for
+
+WB_MODELS = ["mistral-7b-ft", "llama-70b-ft1", "vicuna-13b-ft",
+             "llama-70b-ft2", "vicuna-13b-ft2"]
+
+
+def test_paper_headline_multi_model():
+    """QLM vs vLLM on W_B: throughput gain in the paper's 'up to 3-4x'
+    regime and SLO attainment gap in the 40-90% band."""
+    res = {}
+    for policy in ("vllm", "qlm"):
+        reqs = workload_b(arrival_rate=25, n_requests=500, seed=11)
+        sim = ClusterSimulator([profiles_for("a100", WB_MODELS)
+                                for _ in range(4)], policy)
+        res[policy] = sim.run(reqs)
+    gain = res["qlm"]["throughput_rps"] / max(res["vllm"]["throughput_rps"], 1e-9)
+    slo_gap = res["qlm"]["slo_attainment"] - res["vllm"]["slo_attainment"]
+    assert gain > 2.0, gain
+    assert slo_gap > 0.2, slo_gap
+
+
+def test_paper_headline_single_model_overload_recovers_with_rate():
+    """Fig. 10: at low arrival rate every SLO is met; at overload nobody
+    wins; QLM dominates in between."""
+    def slo_at(rate, policy):
+        reqs = workload_a(arrival_rate=rate, n_requests=300, seed=12)
+        sim = ClusterSimulator([profiles_for("a100", ["vicuna-13b"])
+                                for _ in range(2)], policy)
+        return sim.run(reqs)["slo_attainment"]
+
+    assert slo_at(5, "qlm") > 0.95
+    mid_q, mid_v = slo_at(60, "qlm"), slo_at(60, "vllm")
+    assert mid_q >= mid_v
+
+
+def test_all_four_policies_available():
+    for name in ("vllm", "edf", "shepherd", "qlm"):
+        p = make_policy(name)
+        assert p.traits.name == name
