@@ -52,8 +52,9 @@ class GlobalScheduler:
                 if g.model not in inst.hw_by_model:
                     drain[inst.instance_id] = math.inf  # can't serve here
                     continue
-                est = self.estimator.group_drain_time(len(g.pending()), wl,
-                                                      inst.hw(g.model))
+                est = self.estimator.group_drain_time(
+                    len(g.pending()), wl, inst.hw(g.model),
+                    prompt_tokens=wl.mu_input)
                 drain[inst.instance_id] = est.conservative(self.estimator.z)
             gspecs.append(GroupSpec(
                 group_id=g.group_id, model=g.model,
@@ -122,8 +123,9 @@ class GlobalScheduler:
                 if g.model != cur:
                     t += hw.swap_time
                     cur = g.model
+                wl = g.workload_profile()
                 est = self.estimator.group_drain_time(
-                    len(g.pending()), g.workload_profile(), hw)
+                    len(g.pending()), wl, hw, prompt_tokens=wl.mu_input)
                 t += est.conservative(self.estimator.z)
                 if now + t > g.earliest_deadline():
                     return True

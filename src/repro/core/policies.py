@@ -32,6 +32,15 @@ class PolicyTraits:
     waiting_overestimate: float = 1.0  # multiplicative waiting-time bias
     # (SHEPHERD/Clockwork assume deterministic worst-case exec times: the
     #  paper's Fig. 1 shows they OVER-estimate LLM queue waiting time.)
+    # Chunked-prefill quantum (tokens per sequence per iteration), matching
+    # the real engine's EngineConfig.prefill_chunk_tokens: prefill cost is
+    # spread over iterations that keep decoding, instead of one lump
+    # iteration per admission round.  None => legacy lump accounting.
+    # Known abstraction gap: the engine additionally clamps its quantum to a
+    # model's sliding window (engine._chunk_quantum); the sim models one
+    # quantum per policy, so SWA models with chunk > window are approximated
+    # (see ROADMAP open items).
+    prefill_chunk_tokens: Optional[int] = None
 
 
 def _least_loaded(instances: Sequence[InstanceInfo]) -> InstanceInfo:

@@ -51,6 +51,9 @@ class Request:
     true_output_tokens: Optional[int] = None
     # scheduling flag: currently in a running batch
     _in_flight: bool = False
+    # chunked-prefill progress kept across evictions (simulator mirror of
+    # the engine's snapshot["prefill_pos"])
+    _prefill_done: int = 0
 
     @property
     def prompt_len(self) -> int:

@@ -44,12 +44,38 @@ class WorkloadProfile:
 @dataclasses.dataclass(frozen=True)
 class HardwareProfile:
     """Per (model, device-type) constants from one profiling batch run."""
-    prefill_time: float          # P seconds (≈ constant per model, §6)
+    # P: prefill seconds per 1k prompt tokens (the simulator and
+    # prefill_seconds() charge it as a rate); used as-is as the constant
+    # per-admission term when no prompt length is supplied (§6's "≈ constant
+    # per model" reading, i.e. a ~1k-token prompt).
+    prefill_time: float
     decode_per_token: float      # d seconds per decode iteration
     inefficiency: float          # ε ≥ 1, continuous-batching preemption factor
     token_capacity: int          # GPU — total KV tokens the device holds
     swap_time: float = 0.0       # S — model load time onto this device
     model_max_tokens: int = 2048  # decode bound for Eq. 4
+    # Chunked-prefill quantum of the serving instance (None = single-shot
+    # lump prefill).  With chunking, a prompt of I tokens occupies
+    # ceil(I / chunk) iterations that each also run a decode step, so the
+    # prefill term of C_q grows by that interleaving overhead.
+    prefill_chunk_tokens: Optional[int] = None
+
+    def prefill_seconds(self, prompt_tokens: Optional[float] = None) -> float:
+        """Prefill term P for one request.
+
+        Without ``prompt_tokens`` this is the paper's constant P.  With it,
+        P scales per-1k-prompt-tokens (matching the simulator's accounting)
+        and, when the instance prefills in chunks, adds one interleaved
+        decode iteration per chunk.
+        """
+        if prompt_tokens is None:
+            return self.prefill_time
+        t = self.prefill_time * (prompt_tokens / 1024.0)
+        if self.prefill_chunk_tokens:
+            n_chunks = math.ceil(max(prompt_tokens, 1.0)
+                                 / self.prefill_chunk_tokens)
+            t += n_chunks * self.decode_per_token
+        return t
 
     def batch_size(self, wl: WorkloadProfile) -> float:
         """Eq. 16: B ≈ GPU / E[I + O]."""
@@ -93,29 +119,38 @@ class RWTEstimator:
     # -- Eq. 1/5: completion bound for a request / group ------------------
     def request_completion(self, queue_position: int, wl: WorkloadProfile,
                            hw: HardwareProfile,
-                           max_output_tokens: Optional[int] = None) -> WaitEstimate:
+                           max_output_tokens: Optional[int] = None,
+                           prompt_tokens: Optional[float] = None) -> WaitEstimate:
+        """Eq. 1/5.  ``prompt_tokens`` (e.g. ``wl.mu_input``) switches the
+        prefill term from the constant P to the token-scaled,
+        chunk-interleaving-aware estimate (``hw.prefill_seconds``)."""
         w = self.waiting_time(queue_position, wl, hw)
-        extra = hw.prefill_time + self.decode_time(hw, max_output_tokens)
+        extra = hw.prefill_seconds(prompt_tokens) \
+            + self.decode_time(hw, max_output_tokens)
         return WaitEstimate(w.mean + extra, w.std)
 
     def group_drain_time(self, n_requests: int, wl: WorkloadProfile,
-                         hw: HardwareProfile) -> WaitEstimate:
+                         hw: HardwareProfile,
+                         prompt_tokens: Optional[float] = None) -> WaitEstimate:
         """Eq. 5 over a whole request group: the LAST request's completion.
 
         The group's total output tokens ~ N(nμ_o, nσ_o²); drain = tokens/Θ,
         plus the conservative tail decode for the final request.
+        ``prompt_tokens`` (the group's μ_input) makes the prefill term
+        token-scaled and chunk-interleaving-aware (``hw.prefill_seconds``).
         """
         theta = hw.throughput(wl)
         mean = n_requests * wl.mu_output / theta
         std = math.sqrt(max(n_requests, 1)) * wl.sigma_output / theta
-        return WaitEstimate(mean + hw.prefill_time, std)
+        return WaitEstimate(mean + hw.prefill_seconds(prompt_tokens), std)
 
     def group_first_token_time(self, n_ahead_tokens: float,
-                               wl: WorkloadProfile, hw: HardwareProfile) -> float:
+                               wl: WorkloadProfile, hw: HardwareProfile,
+                               prompt_tokens: Optional[float] = None) -> float:
         """TTFT for a group whose predecessors hold ``n_ahead_tokens``
         pending output tokens (used by the violation monitor)."""
         theta = hw.throughput(wl)
-        return n_ahead_tokens / theta + hw.prefill_time
+        return n_ahead_tokens / theta + hw.prefill_seconds(prompt_tokens)
 
     # -- accuracy metric (Fig. 18) ----------------------------------------
     @staticmethod

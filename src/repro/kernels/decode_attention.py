@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams as _CompilerParams
+
 DEFAULT_BLOCK_K = 256
 NEG_INF = -1e30
 
@@ -150,7 +152,7 @@ def decode_attention_quant(q: jax.Array, k: jax.Array, v: jax.Array,
             pltpu.VMEM((group,), jnp.float32),
             pltpu.VMEM((group, D), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(lengths.astype(jnp.int32), qg, k, v, k_scale, v_scale)
@@ -201,7 +203,7 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
             pltpu.VMEM((group,), jnp.float32),
             pltpu.VMEM((group, D), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(lengths, qg, k, v)

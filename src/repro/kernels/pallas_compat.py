@@ -1,0 +1,12 @@
+"""Version compat for the Pallas TPU API.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (and
+back, across releases); resolve whichever this jax ships so the kernels
+compile under both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

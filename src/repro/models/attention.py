@@ -232,6 +232,83 @@ def attend_prefill(params, cfg, x: jax.Array, positions: jax.Array,
     return out @ params["wo"], {"k": new_k, "v": new_v}
 
 
+def attend_prefill_chunk(params, cfg, x: jax.Array, positions: jax.Array,
+                         valid: jax.Array,
+                         cache: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Chunk-granular prefill continuation (chunked-prefill serving path).
+
+    Attends this chunk's queries against the already-populated cache plus
+    the chunk's own keys, and writes the chunk's k/v into the cache at their
+    absolute positions (rolling slots for SWA).
+
+    x: (B, C, d) right-padded chunk embeddings; positions: (B, C) absolute
+    token positions (``starts[:, None] + arange(C)``); valid: (B,) number of
+    real tokens in each row's chunk — 0 marks an inactive row whose writes
+    are dropped and whose outputs the caller ignores.
+
+    The attention is computed in two kv segments so a rolling SWA cache
+    never reads a slot this same chunk just overwrote: the PRE-chunk cache
+    (positions <= start-1, read from the cache as it was on entry) and the
+    in-chunk keys (read from the fresh projections).
+    """
+    B, C, _ = x.shape
+    S = cache["k"].shape[2]
+    hd = cfg.resolved_head_dim
+    q, k, v = _project_qkv(params, cfg, x, positions)  # k/v: (B, C, KVH, hd)
+    starts = positions[:, 0]
+
+    # ---- cache write: slot = pos (full) / pos % S (rolling SWA) ----------
+    in_chunk = jnp.arange(C)[None, :] < valid[:, None]          # (B, C)
+    slot = positions % S if cfg.sliding_window is not None else positions
+    write_slot = jnp.where(in_chunk, slot, S)                    # S => dropped
+    b_idx = jnp.arange(B)[:, None]
+    if cfg.kv_quant:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        new_cache = {
+            "k": cache["k"].at[b_idx, :, write_slot, :].set(kq, mode="drop"),
+            "v": cache["v"].at[b_idx, :, write_slot, :].set(vq, mode="drop"),
+            "k_scale": cache["k_scale"].at[b_idx, :, write_slot].set(ks, mode="drop"),
+            "v_scale": cache["v_scale"].at[b_idx, :, write_slot].set(vs, mode="drop"),
+        }
+        old_k = _dequantize_kv(cache["k"], cache["k_scale"], x.dtype)
+        old_v = _dequantize_kv(cache["v"], cache["v_scale"], x.dtype)
+    else:
+        new_cache = {
+            "k": cache["k"].at[b_idx, :, write_slot, :].set(k, mode="drop"),
+            "v": cache["v"].at[b_idx, :, write_slot, :].set(v, mode="drop"),
+        }
+        old_k, old_v = cache["k"], cache["v"]
+
+    # ---- attention: [pre-chunk cache | in-chunk keys] --------------------
+    qh = q.transpose(0, 2, 1, 3)                                 # (B, H, C, hd)
+    kh = k.transpose(0, 2, 1, 3)                                 # (B, KVH, C, hd)
+    vh = v.transpose(0, 2, 1, 3)
+    k_all = jnp.concatenate([old_k, kh], axis=2)                 # (B, KVH, S+C, hd)
+    v_all = jnp.concatenate([old_v, vh], axis=2)
+
+    q_pos = positions[:, :, None]                                # (B, C, 1)
+    s_idx = jnp.arange(S)[None, None, :]                         # (1, 1, S)
+    if cfg.sliding_window is not None:
+        # slot s of the PRE-chunk cache holds the largest position
+        # p <= start-1 with p % S == s (negative => never written).
+        prev = (starts - 1)[:, None, None]
+        p_s = prev - ((prev - s_idx) % S)
+        cache_mask = (p_s >= 0) & (p_s > q_pos - cfg.sliding_window)
+    else:
+        cache_mask = jnp.broadcast_to(s_idx < starts[:, None, None], (B, C, S))
+    j_idx = jnp.arange(C)[None, None, :]
+    p_j = starts[:, None, None] + j_idx
+    chunk_mask = (p_j <= q_pos) & (j_idx < valid[:, None, None])
+    if cfg.sliding_window is not None:
+        chunk_mask = chunk_mask & (p_j > q_pos - cfg.sliding_window)
+    mask = jnp.concatenate([cache_mask, chunk_mask], axis=-1)[:, None]
+
+    out = _sdpa(qh, k_all, v_all, mask)
+    out = out.transpose(0, 2, 1, 3).reshape(B, C, cfg.num_heads * hd)
+    return out @ params["wo"], new_cache
+
+
 def attend_decode(params, cfg, x: jax.Array, lengths: jax.Array,
                   cache: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """One-token decode. x: (B, 1, d); lengths: (B,) tokens already cached

@@ -33,6 +33,10 @@ class Model:
     cache_axes: Callable
     prefill: Callable
     decode_step: Callable
+    # chunked-prefill continuation (params, cache, tokens, starts, valid) ->
+    # (last-valid-position logits, cache); None = arch needs single-shot
+    # prefill (SSM/hybrid state carry, enc-dec cross attention).
+    prefill_chunk: Optional[Callable] = None
 
     def eval_shape_params(self, dtype=jnp.float32):
         """Param ShapeDtypeStructs without allocation (for the dry-run)."""
@@ -80,6 +84,8 @@ def _build_transformer(cfg):
         prefill=prefill_fn,
         decode_step=lambda params, cache, tokens, lengths:
             transformer.decode_step(params, cfg, tokens, lengths, cache),
+        prefill_chunk=lambda params, cache, tokens, starts, valid:
+            transformer.prefill_chunk(params, cfg, tokens, starts, valid, cache),
     )
 
 

@@ -206,6 +206,45 @@ def prefill(params, cfg, tokens: jax.Array, cache,
     return unembed(params, cfg, x[:, -1]), new_cache
 
 
+def _block_prefill_chunk(cfg, x, positions, valid, bp, cache_layer):
+    h = layers.rms_norm(x, bp["attn_norm"], cfg.rms_norm_eps)
+    a, new_cache = attention.attend_prefill_chunk(bp["attn"], cfg, h,
+                                                  positions, valid, cache_layer)
+    x = x + a
+    h = layers.rms_norm(x, bp["mlp_norm"], cfg.rms_norm_eps)
+    if cfg.moe is not None:
+        out, _ = moe_lib.apply_moe(bp["moe"], cfg, h)
+    else:
+        out = layers.swiglu_mlp(bp["mlp"], h)
+    return x + out, new_cache
+
+
+def prefill_chunk(params, cfg, tokens: jax.Array, starts: jax.Array,
+                  valid: jax.Array, cache):
+    """One chunk of a chunked prefill over a continuous batch.
+
+    tokens: (B, C) right-padded chunk tokens; starts: (B,) tokens already
+    cached per sequence; valid: (B,) real tokens in each row (0 = inactive
+    row: no cache writes, output ignored).  Returns (logits at each row's
+    last valid position (B, V), new cache) — the logits are only meaningful
+    for rows whose chunk is the final one of their prompt.
+    """
+    x = embed_tokens(params, cfg, tokens)
+    B, C, _ = x.shape
+    positions = starts[:, None] + jnp.arange(C)[None, :]
+
+    def scan_fn(x, inp):
+        bp, cl = inp
+        x, new_cl = _block_prefill_chunk(cfg, x, positions, valid, bp, cl)
+        return x, new_cl
+
+    x, new_cache = jax.lax.scan(scan_fn, x, (params["blocks"], cache))
+    x = layers.rms_norm(x, params["final_norm"], cfg.rms_norm_eps)
+    last = jnp.clip(valid - 1, 0, C - 1)
+    x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
+    return unembed(params, cfg, x_last), new_cache
+
+
 def _block_decode(cfg, x, lengths, bp, cache_layer):
     h = layers.rms_norm(x, bp["attn_norm"], cfg.rms_norm_eps)
     a, new_cache = attention.attend_decode(bp["attn"], cfg, h, lengths, cache_layer)

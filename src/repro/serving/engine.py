@@ -6,11 +6,22 @@ Orca/vLLM:
 
   * fixed slot array (``max_slots``) holding the running batch,
   * paged KV accounting via ``BlockManager`` (admission + preemption),
-  * ``step()`` = admit-from-pull-source, then ONE decode iteration for all
-    active slots,
+  * **chunked, length-bucketed prefill**: prompts are split into chunks of
+    at most ``prefill_chunk_tokens``; every ``step()`` runs ONE chunk for
+    all mid-prefill slots as a single batched jit call (chunk length padded
+    to a power-of-two bucket so jit shapes stay bounded) and THEN a decode
+    iteration for the fully-prefilled slots — a long batch-job prompt no
+    longer stalls interactive decodes (SLOs-Serve / chunked-prefill
+    co-scheduling),
+  * ``step()`` = admit-from-pull-source, one prefill chunk round, one
+    decode iteration for all decode-ready slots,
   * request eviction with host-side KV/state snapshots (the paper's
-    eviction LSO — resume skips prefill entirely),
-  * model swapping (flush KV, replace weights; paper's swap LSO).
+    eviction LSO — resume skips prefill entirely; mid-prefill evictions
+    resume from the last completed chunk),
+  * model swapping (flush KV, replace weights; paper's swap LSO),
+  * selectable attention backend (``attention_backend="pallas"`` routes
+    decode through the Pallas kernels — interpret mode on CPU, Mosaic on
+    TPU — so the kernel suite exercises the serving code path).
 
 All cache pytrees have layout (layers/sites, batch, ...), so slot insert /
 extract are uniform ``tree_map``s over axis 1.
@@ -19,7 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +39,8 @@ import numpy as np
 from repro.core.request import Request
 from repro.models.model_factory import Model
 from repro.serving.kv_cache import BlockManager
+
+ATTENTION_BACKENDS = ("xla", "pallas")
 
 
 @dataclasses.dataclass
@@ -38,17 +51,49 @@ class EngineConfig:
     kv_blocks: Optional[int] = None    # None => max_slots*max_seq_len worth
     eos_token: Optional[int] = None
     dtype: Any = jnp.float32
+    # Chunked prefill: max prompt tokens processed per slot per step().
+    # 0 disables chunking (legacy single-shot batch=1 prefill at admit).
+    prefill_chunk_tokens: int = 128
+    # Chunk-length padding buckets; None => powers of two up to
+    # prefill_chunk_tokens.  Bounded buckets keep the number of distinct
+    # jit shapes (and thus compiles) small.
+    prefill_buckets: Optional[Tuple[int, ...]] = None
+    # Serving attention backend: None follows the model config's
+    # use_pallas_attention flag; "xla" / "pallas" force the jnp or Pallas
+    # (flash / blocked-decode, interpret mode off-TPU) paths respectively.
+    attention_backend: Optional[str] = None
 
     def resolved_kv_blocks(self) -> int:
         if self.kv_blocks is not None:
             return self.kv_blocks
         return (self.max_slots * self.max_seq_len) // self.block_size
 
+    def resolved_buckets(self) -> Tuple[int, ...]:
+        if self.prefill_buckets:
+            buckets = sorted(self.prefill_buckets)
+            if self.prefill_chunk_tokens > 0 \
+                    and buckets[-1] < self.prefill_chunk_tokens:
+                # buckets must cover the largest possible chunk, else the
+                # padding falls back to exact lengths and the jit-shape
+                # bound is lost
+                buckets.append(self.prefill_chunk_tokens)
+            return tuple(buckets)
+        if self.prefill_chunk_tokens <= 0:
+            return ()
+        buckets = []
+        b = 16
+        while b < self.prefill_chunk_tokens:
+            buckets.append(b)
+            b *= 2
+        buckets.append(self.prefill_chunk_tokens)
+        return tuple(buckets)
+
 
 @dataclasses.dataclass
 class EngineStats:
     decode_iterations: int = 0
     prefills: int = 0
+    prefill_chunks: int = 0
     evictions: int = 0
     resumes: int = 0
     model_swaps: int = 0
@@ -63,9 +108,13 @@ class ContinuousBatchingEngine:
     def __init__(self, model: Model, params, cfg: EngineConfig,
                  model_name: str = "default",
                  clock: Callable[[], float] = time.monotonic):
+        if cfg.attention_backend not in ATTENTION_BACKENDS + (None,):
+            raise ValueError(
+                f"attention_backend must be one of {ATTENTION_BACKENDS} "
+                f"or None, got {cfg.attention_backend!r}")
         self.cfg = cfg
         self.clock = clock
-        self.model = model
+        self.model = self._with_backend(model)
         self.params = params
         self.model_name = model_name
         self.stats = EngineStats()
@@ -73,13 +122,34 @@ class ContinuousBatchingEngine:
         self.block_mgr = BlockManager(cfg.resolved_kv_blocks(), cfg.block_size)
         self.slots: List[Optional[Request]] = [None] * cfg.max_slots
         self.lengths = np.zeros(cfg.max_slots, np.int32)
-        self.cache = model.init_cache(cfg.max_slots, cfg.max_seq_len, cfg.dtype)
+        # prompt tokens already prefilled per slot; a slot is mid-prefill
+        # while prefill_pos < prompt_len (decode-ready otherwise)
+        self.prefill_pos = np.zeros(cfg.max_slots, np.int32)
+        self.cache = self.model.init_cache(cfg.max_slots, cfg.max_seq_len,
+                                           cfg.dtype)
         self.pull_source: Optional[Callable[[], Optional[Request]]] = None
         self.completed: List[Request] = []
         self._pushback: Optional[Request] = None
+        # requests that finished INSIDE admit() (legacy path, EOS/max_new on
+        # the prefill token); drained into the next step()'s return value
+        self._admit_completed: List[Request] = []
 
         self._decode_fn = jax.jit(self._decode_impl)
-        self._prefill_cache = {}  # per-length jitted prefill
+        self._chunk_fn = jax.jit(self._prefill_chunk_impl)
+        self._prefill_cache = {}  # per-length jitted single-shot prefill
+
+    def _with_backend(self, model: Model) -> Model:
+        """Route the model's attention through the configured backend
+        (None = keep the model config's own use_pallas_attention)."""
+        backend = self.cfg.attention_backend
+        if backend is None:
+            return model
+        want = backend == "pallas"
+        if model.cfg.use_pallas_attention != want:
+            from repro.models.model_factory import build_model
+            return build_model(dataclasses.replace(
+                model.cfg, use_pallas_attention=want))
+        return model
 
     # ------------------------------------------------------------------
     # jitted compute
@@ -88,6 +158,12 @@ class ContinuousBatchingEngine:
         logits, new_cache = self.model.decode_step(params, cache, tokens, lengths)
         next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return next_tokens, new_cache
+
+    def _prefill_chunk_impl(self, params, cache, tokens, starts, valid):
+        logits, new_cache = self.model.prefill_chunk(params, cache, tokens,
+                                                     starts, valid)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return tok, new_cache
 
     def _prefill_one(self, prompt: np.ndarray, extras: Dict[str, Any]):
         """Prefill a single request (batch=1, exact length — SSM-state safe)."""
@@ -129,6 +205,15 @@ class ContinuousBatchingEngine:
     def active_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slots) if r is not None]
 
+    def decode_slots(self) -> List[int]:
+        """Slots whose prefill is complete (participate in decode)."""
+        return [i for i, r in enumerate(self.slots)
+                if r is not None and self.prefill_pos[i] >= r.prompt_len]
+
+    def prefilling_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slots)
+                if r is not None and self.prefill_pos[i] < r.prompt_len]
+
     def num_active(self) -> int:
         return len(self.active_slots())
 
@@ -138,40 +223,111 @@ class ContinuousBatchingEngine:
     # ------------------------------------------------------------------
     # admission (request pulling LSO actuation point)
     # ------------------------------------------------------------------
+    def _owed_prefill_blocks(self) -> int:
+        """KV blocks committed to mid-prefill slots but not yet allocated
+        (admission reserves only the first chunk; the rest arrives
+        chunk-by-chunk via ``BlockManager.extend``)."""
+        owed = 0
+        for i in self.prefilling_slots():
+            r = self.slots[i]
+            have = len(self.block_mgr.block_table(r.req_id)) \
+                if self.block_mgr.has(r.req_id) else 0
+            owed += max(self.block_mgr.blocks_needed(r.prompt_len + 1) - have, 0)
+        return owed
+
     def can_admit(self, req: Request) -> bool:
         if self._free_slot() is None:
             return False
         need = req.prompt_len + req.generated + 1
         if need > self.cfg.max_seq_len:
             return False
-        return self.block_mgr.can_allocate(need)
+        # conservative: the WHOLE prompt must be coverable up front — counting
+        # blocks still owed to other mid-prefill slots — even though chunked
+        # prefill allocates chunk-by-chunk; otherwise two long prompts could
+        # both pass the check and one would be guaranteed to preempt
+        # mid-prefill.
+        return self.block_mgr.can_allocate(
+            need, reserve_blocks=self._owed_prefill_blocks())
+
+    def _use_chunked(self, extras: Dict[str, Any]) -> bool:
+        return (self.cfg.prefill_chunk_tokens > 0
+                and self.model.prefill_chunk is not None
+                and not extras)
+
+    def _chunk_quantum(self) -> int:
+        """Effective chunk size: clamped to the rolling SWA cache length so
+        a single chunk can never write the same cache slot twice (duplicate
+        scatter indices resolve nondeterministically)."""
+        C = self.cfg.prefill_chunk_tokens
+        w = self.model.cfg.sliding_window
+        if C > 0 and w is not None:
+            C = min(C, min(self.cfg.max_seq_len, w))
+        return C
 
     def admit(self, req: Request, extras: Optional[Dict[str, Any]] = None) -> bool:
-        """Prefill (or snapshot-restore) ``req`` into a free slot."""
+        """Start prefill for (or snapshot-restore) ``req`` in a free slot.
+
+        On the chunked path admission only reserves the first chunk's KV
+        blocks and marks the slot mid-prefill; the actual compute happens
+        inside subsequent ``step()`` calls, interleaved with decode.
+        """
         slot = self._free_slot()
         if slot is None or not self.can_admit(req):
             return False
         t0 = time.monotonic()
-        total = req.prompt_len + req.generated
-        if req.snapshot is not None:
-            # eviction resume: restore KV/state, no prefill recompute
-            self._restore_cache(req.snapshot["cache"], slot)
-            self.lengths[slot] = req.snapshot["length"]
+        ex = extras or req.extras or {}
+        if req.snapshot is not None \
+                and req.snapshot.get("prefill_pos", req.prompt_len) < req.prompt_len \
+                and not self._use_chunked(ex):
+            # mid-prefill snapshot but THIS engine can't continue chunking
+            # (chunking disabled, or the arch has no prefill_chunk): drop it
+            # and recompute the full prefill instead of spinning on a
+            # zero-token chunk round
             req.snapshot = None
-            self.block_mgr.allocate(req.req_id, total + 1)
+        if req.snapshot is not None:
+            # eviction resume: restore KV/state, no prefill recompute.
+            # Mid-prefill snapshots resume chunking from the last chunk.
+            snap = req.snapshot
+            self._restore_cache(snap["cache"], slot)
+            self.lengths[slot] = snap["length"]
+            self.prefill_pos[slot] = snap.get("prefill_pos", req.prompt_len)
+            req.snapshot = None
+            if self.prefill_pos[slot] >= req.prompt_len:
+                total = req.prompt_len + req.generated
+                self.block_mgr.allocate(req.req_id, total + 1)
+            else:
+                self.block_mgr.allocate(req.req_id, int(self.prefill_pos[slot]))
             self.stats.resumes += 1
+            self.slots[slot] = req
+        elif self._use_chunked(ex):
+            first = min(self._chunk_quantum(), req.prompt_len)
+            self.block_mgr.allocate(req.req_id, first)
+            self.prefill_pos[slot] = 0
+            self.lengths[slot] = 0
+            self.slots[slot] = req
         else:
-            tok, cache1 = self._prefill_one(np.asarray(req.prompt_tokens),
-                                            extras or req.extras or {})
+            # legacy single-shot path (SSM/hybrid/enc-dec state carry, and
+            # modality extras that must ride the full-prompt prefill).
+            # Compute first — a raising prefill must leave the engine clean.
+            tok, cache1 = self._prefill_one(np.asarray(req.prompt_tokens), ex)
+            self.slots[slot] = req
             self._insert_cache(cache1, slot)
             self.lengths[slot] = req.prompt_len
+            self.prefill_pos[slot] = req.prompt_len
             self.block_mgr.allocate(req.req_id, req.prompt_len + 1)
+            now = self.clock()
             if req.first_token_time is None:
-                req.first_token_time = self.clock()
+                req.first_token_time = now
             req.output_tokens.append(tok)
             req.generated += 1
             self.stats.prefills += 1
-        self.slots[slot] = req
+            # same first-token completion check as the chunked path (EOS on
+            # the prefill token / max_new_tokens == 1) — may free the slot.
+            # Lands in self.completed immediately; the _admit_completed
+            # buffer lets the next step() also RETURN it.
+            n0 = len(self._admit_completed)
+            self._finish_if_done(slot, tok, now, self._admit_completed)
+            self.completed.extend(self._admit_completed[n0:])
         self.stats.prefill_time += time.monotonic() - t0
         return True
 
@@ -183,18 +339,21 @@ class ContinuousBatchingEngine:
 
         TPU adaptation of the paper's async GPU→CPU copy: ``device_get`` of
         the slot slice (the engine overlaps this with the next decode
-        iteration when dispatch is async).
+        iteration when dispatch is async).  Mid-prefill slots keep their
+        chunk progress in the snapshot and resume without recompute.
         """
         req = self.slots[slot]
         assert req is not None
         req.snapshot = {
             "cache": self._extract_cache(slot),
             "length": int(self.lengths[slot]),
+            "prefill_pos": int(self.prefill_pos[slot]),
         }
         req.n_evictions += 1
         self.block_mgr.free(req.req_id)
         self.slots[slot] = None
         self.lengths[slot] = 0
+        self.prefill_pos[slot] = 0
         self.stats.evictions += 1
         return req
 
@@ -218,13 +377,14 @@ class ContinuousBatchingEngine:
         # (their KV is meaningless under the new weights)
         for r in evicted:
             r.snapshot = None
-        self.model = model
+        self.model = self._with_backend(model)
         self.params = params
         self.model_name = model_name
-        self.cache = model.init_cache(self.cfg.max_slots, self.cfg.max_seq_len,
-                                      self.cfg.dtype)
+        self.cache = self.model.init_cache(self.cfg.max_slots,
+                                           self.cfg.max_seq_len, self.cfg.dtype)
         self.block_mgr.reset()
         self._decode_fn = jax.jit(self._decode_impl)
+        self._chunk_fn = jax.jit(self._prefill_chunk_impl)
         self._prefill_cache.clear()
         self.stats.model_swaps += 1
         self.stats.swap_time += time.monotonic() - t0
@@ -237,9 +397,119 @@ class ContinuousBatchingEngine:
         r, self._pushback = self._pushback, None
         return r
 
+    def _bucket_for(self, n: int) -> int:
+        for b in self.cfg.resolved_buckets():
+            if n <= b:
+                return b
+        return n
+
+    def _finish_if_done(self, slot: int, tok: int, now: float,
+                        done: List[Request]) -> bool:
+        req = self.slots[slot]
+        eos = (self.cfg.eos_token is not None and tok == self.cfg.eos_token)
+        if eos or req.generated >= req.max_new_tokens \
+                or self.lengths[slot] >= self.cfg.max_seq_len - 1:
+            req.completion_time = now
+            done.append(req)
+            self.block_mgr.free(req.req_id)
+            self.slots[slot] = None
+            self.lengths[slot] = 0
+            self.prefill_pos[slot] = 0
+            return True
+        return False
+
+    def _prefill_chunk_round(self, done: List[Request]) -> None:
+        """One chunk of prefill for EVERY mid-prefill slot, batched into a
+        single jit call padded to the smallest covering length bucket."""
+        work = self.prefilling_slots()
+        if not work:
+            return
+        t0 = time.monotonic()
+        C = self._chunk_quantum()
+        chunks: Dict[int, Tuple[np.ndarray, int, bool]] = {}
+        for i in work:
+            req = self.slots[i]
+            pos = int(self.prefill_pos[i])
+            n = min(C, req.prompt_len - pos)
+            final = pos + n >= req.prompt_len
+            # chunk-granular KV growth (+1 slot for the first decode token
+            # on the final chunk, mirroring single-shot accounting)
+            need = req.prompt_len + 1 if final else pos + n
+            if not self.block_mgr.extend(req.req_id, need):
+                # mid-prefill OOM: preempt; the snapshot keeps chunk progress
+                # and the request becomes re-pullable (sim _evict_seq parity)
+                self.stats.preemptions += 1
+                self.evict_slot(i)
+                req._in_flight = False
+                continue
+            chunk = np.asarray(req.prompt_tokens[pos:pos + n], np.int32)
+            chunks[i] = (chunk, n, final)
+        if not chunks:
+            return
+        bucket = self._bucket_for(max(n for _, n, _ in chunks.values()))
+        tokens = np.zeros((self.cfg.max_slots, bucket), np.int32)
+        starts = np.zeros(self.cfg.max_slots, np.int32)
+        valid = np.zeros(self.cfg.max_slots, np.int32)
+        for i, (chunk, n, _) in chunks.items():
+            tokens[i, :n] = chunk
+            starts[i] = self.prefill_pos[i]
+            valid[i] = n
+        toks_out, self.cache = self._chunk_fn(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(starts), jnp.asarray(valid))
+        toks_out = np.asarray(toks_out)
+        self.stats.prefill_chunks += 1
+        now = self.clock()
+        for i, (_, n, final) in chunks.items():
+            req = self.slots[i]
+            self.prefill_pos[i] += n
+            self.lengths[i] = self.prefill_pos[i]
+            if final:
+                tok = int(toks_out[i])
+                if req.first_token_time is None:
+                    req.first_token_time = now
+                req.output_tokens.append(tok)
+                req.generated += 1
+                self.stats.prefills += 1
+                self._finish_if_done(i, tok, now, done)
+        self.stats.prefill_time += time.monotonic() - t0
+
+    def _decode_round(self, done: List[Request]) -> None:
+        active = self.decode_slots()
+        if not active:
+            return
+        t0 = time.monotonic()
+        tokens = np.zeros(self.cfg.max_slots, np.int32)
+        for i in active:
+            tokens[i] = self.slots[i].output_tokens[-1] if self.slots[i].output_tokens \
+                else self.slots[i].prompt_tokens[-1]
+        next_tokens, self.cache = self._decode_fn(
+            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(self.lengths))
+        next_tokens = np.asarray(next_tokens)
+        self.stats.decode_iterations += 1
+        self.stats.decode_time += time.monotonic() - t0
+
+        now = self.clock()
+        for i in active:
+            req = self.slots[i]
+            # block accounting; preempt on OOM (vLLM-style)
+            if not self.block_mgr.append_token(req.req_id):
+                self.stats.preemptions += 1
+                self.evict_slot(i)
+                req._in_flight = False
+                continue
+            self.lengths[i] += 1
+            tok = int(next_tokens[i])
+            req.output_tokens.append(tok)
+            req.generated += 1
+            self.stats.tokens_generated += 1
+            if req.first_token_time is None:
+                req.first_token_time = now
+            self._finish_if_done(i, tok, now, done)
+
     def step(self) -> List[Request]:
-        """Admit from the pull source, then one decode iteration.
-        Returns requests completed this step."""
+        """Admit from the pull source, run one prefill chunk round, then one
+        decode iteration.  Returns requests completed this step."""
         # 1. request pulling: admit while capacity allows
         if self.pull_source is not None:
             while self._pushback is None:
@@ -254,73 +524,43 @@ class ContinuousBatchingEngine:
                     self._pushback = req
                     break
 
-        active = self.active_slots()
-        if not active:
-            return []
-
-        # 2. continuous-batching decode iteration
-        t0 = time.monotonic()
-        tokens = np.zeros(self.cfg.max_slots, np.int32)
-        for i in active:
-            tokens[i] = self.slots[i].output_tokens[-1] if self.slots[i].output_tokens \
-                else self.slots[i].prompt_tokens[-1]
-        next_tokens, self.cache = self._decode_fn(
-            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(self.lengths))
-        next_tokens = np.asarray(next_tokens)
-        self.stats.decode_iterations += 1
-        self.stats.decode_time += time.monotonic() - t0
-
+        # requests that finished inside admit() since the last step are
+        # already in self.completed; return them alongside this step's
         done: List[Request] = []
-        now = self.clock()
-        for i in active:
-            req = self.slots[i]
-            # block accounting; preempt on OOM (vLLM-style)
-            if not self.block_mgr.append_token(req.req_id):
-                self.stats.preemptions += 1
-                self.evict_slot(i)
-                continue
-            self.lengths[i] += 1
-            tok = int(next_tokens[i])
-            req.output_tokens.append(tok)
-            req.generated += 1
-            self.stats.tokens_generated += 1
-            if req.first_token_time is None:
-                req.first_token_time = now
-            eos = (self.cfg.eos_token is not None and tok == self.cfg.eos_token)
-            if eos or req.generated >= req.max_new_tokens \
-                    or self.lengths[i] >= self.cfg.max_seq_len - 1:
-                req.completion_time = now
-                done.append(req)
-                self.block_mgr.free(req.req_id)
-                self.slots[i] = None
-                self.lengths[i] = 0
+        # 2. one prefill chunk for every mid-prefill slot (batched)
+        self._prefill_chunk_round(done)
+        # 3. continuous-batching decode iteration for decode-ready slots
+        self._decode_round(done)
         self.completed.extend(done)
-        return done
+        admit_done, self._admit_completed = self._admit_completed, []
+        return admit_done + done
 
     # ------------------------------------------------------------------
     # profiling (feeds the RWT estimator + simulator)
     # ------------------------------------------------------------------
     def profile(self, prompts: List[np.ndarray], max_new_tokens: int = 32) -> Dict[str, float]:
         """Run one batch (paper §6 "Hardware Profiling": a single batch run)
-        and return {prefill_time P, decode_per_token d, throughput theta}."""
+        and return {prefill_time P, decode_per_token d, throughput theta}.
+
+        Prefill compute happens inside ``step()`` on the chunked path, so
+        the phase split comes from the engine's own stats accounting."""
         import repro.core.request as req_mod
         reqs = [req_mod.Request(prompt_tokens=p, model=self.model_name,
                                 slo=1e9, max_new_tokens=max_new_tokens)
                 for p in prompts]
-        t0 = time.monotonic()
+        s = self.stats
+        pf0, dt0, it0, tok0 = (s.prefill_time, s.decode_time,
+                               s.decode_iterations, s.tokens_generated)
         for r in reqs:
             if not self.admit(r):
                 break
-        prefill_t = time.monotonic() - t0
         n_admitted = self.num_active()
-        t0 = time.monotonic()
-        iters = 0
-        toks0 = self.stats.tokens_generated
         while self.num_active() > 0:
             self.step()
-            iters += 1
-        decode_t = time.monotonic() - t0
-        tokens = self.stats.tokens_generated - toks0
+        prefill_t = s.prefill_time - pf0
+        decode_t = s.decode_time - dt0
+        iters = s.decode_iterations - it0
+        tokens = s.tokens_generated - tok0
         return {
             "prefill_time": prefill_t / max(n_admitted, 1),
             "decode_per_token": decode_t / max(iters, 1),

@@ -53,10 +53,13 @@ class BlockManager:
     def blocks_needed(self, num_tokens: int) -> int:
         return -(-num_tokens // self.block_size)
 
-    def can_allocate(self, num_tokens: int, *, respect_watermark: bool = True) -> bool:
+    def can_allocate(self, num_tokens: int, *, respect_watermark: bool = True,
+                     reserve_blocks: int = 0) -> bool:
+        """``reserve_blocks``: extra blocks already promised elsewhere (e.g.
+        the unallocated remainder of mid-prefill sequences)."""
         need = self.blocks_needed(num_tokens)
         reserve = self.watermark_blocks if respect_watermark else 0
-        return need <= len(self._free) - reserve
+        return need <= len(self._free) - reserve - reserve_blocks
 
     # ------------------------------------------------------------------
     def allocate(self, seq_id: int, num_tokens: int) -> List[int]:
@@ -69,6 +72,26 @@ class BlockManager:
         blocks = [self._free.pop() for _ in range(need)]
         self._seqs[seq_id] = SeqAlloc(block_table=blocks, num_tokens=num_tokens)
         return blocks
+
+    def extend(self, seq_id: int, num_tokens: int) -> bool:
+        """Grow ``seq_id``'s allocation to cover ``num_tokens`` total.
+
+        Chunk-granular prefill allocates one chunk at a time instead of the
+        whole prompt up front; each subsequent chunk extends the allocation.
+        Returns False when the needed blocks aren't free (caller preempts) —
+        like ``append_token``, the watermark is not applied to in-flight
+        sequences.
+        """
+        alloc = self._seqs[seq_id]
+        if num_tokens <= alloc.num_tokens:
+            return True
+        need = self.blocks_needed(num_tokens) - len(alloc.block_table)
+        if need > len(self._free):
+            return False
+        for _ in range(need):
+            alloc.block_table.append(self._free.pop())
+        alloc.num_tokens = num_tokens
+        return True
 
     def append_token(self, seq_id: int) -> bool:
         """Account one more token; returns False if a new block was needed

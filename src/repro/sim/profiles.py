@@ -6,7 +6,7 @@ Mistral-7B, Vicuna-13B, Llama-70B) with published vLLM-era numbers:
   * decode_per_token — per-iteration latency at saturated batch,
   * token_capacity  — KV tokens that fit after weights (paged, ~100% util),
   * swap_time       — CPU→GPU weight transfer (~25 GB/s PCIe 4),
-  * prefill_time    — amortized per-admission prefill cost,
+  * prefill_time    — prefill cost per 1k prompt tokens,
   * inefficiency ε  — continuous-batching preemption factor.
 
 The same dataclass is produced by ``calibrate_from_engine`` for reduced
@@ -76,12 +76,25 @@ def calibrate_from_engine(engine, token_capacity: int,
                           model_max_tokens: int = 64) -> HardwareProfile:
     """Paper §6 'Hardware Profiling': one batch run on the real engine."""
     import numpy as np
-    prompts = [np.random.randint(0, 100, size=8) for _ in range(engine.cfg.max_slots)]
+    # the longest calibration prompt that fits alongside the decode budget:
+    # short prompts would extrapolate fixed per-step dispatch overhead into
+    # the per-1k-token rate
+    calib_prompt_tokens = max(8, min(64, engine.cfg.max_seq_len // 2))
+    prompts = [np.random.randint(0, 100, size=calib_prompt_tokens)
+               for _ in range(engine.cfg.max_slots)]
+    # warm the jitted prefill/decode paths first: the cold compile would
+    # otherwise dominate the measurement (and get extrapolated per-token)
+    engine.profile([np.random.randint(0, 100, size=calib_prompt_tokens)],
+                   max_new_tokens=2)
     prof = engine.profile(prompts, max_new_tokens=16)
     return HardwareProfile(
-        prefill_time=prof["prefill_time"],
+        # profile() measures per-admission wall time for the calibration
+        # prompts; normalize to the per-1k-prompt-token rate the simulator
+        # and HardwareProfile.prefill_seconds charge with
+        prefill_time=prof["prefill_time"] * 1024.0 / calib_prompt_tokens,
         decode_per_token=prof["decode_per_token"],
         inefficiency=1.2,
         token_capacity=token_capacity,
         swap_time=swap_time,
-        model_max_tokens=model_max_tokens)
+        model_max_tokens=model_max_tokens,
+        prefill_chunk_tokens=engine.cfg.prefill_chunk_tokens or None)

@@ -36,6 +36,7 @@ class SimSeq:
     req: Request
     kv_tokens: int          # prompt + generated so far
     remaining: int          # output tokens still to generate (ground truth)
+    prefill_remaining: int = 0  # prompt tokens not yet prefilled (chunked mode)
 
 
 @dataclasses.dataclass
@@ -86,9 +87,12 @@ class SimInstance:
     # ------------------------------------------------------------------
     def _evict_seq(self, seq: SimSeq, *, preempted: bool = False) -> None:
         """Back into its group's pending set; progress (generated) kept —
-        the KV snapshot lives in host memory (eviction LSO)."""
+        the KV snapshot lives in host memory (eviction LSO).  Mid-prefill
+        chunk progress is kept too, mirroring the engine's
+        ``snapshot["prefill_pos"]`` resume (no recompute)."""
         self.running.remove(seq)
         self.kv_used -= seq.kv_tokens
+        seq.req._prefill_done = seq.req.prompt_len - seq.prefill_remaining
         seq.req._in_flight = False
         seq.req.n_evictions += 1
         if preempted:
@@ -157,10 +161,16 @@ class SimInstance:
                 break
             req._in_flight = True
             rem = max((req.true_output_tokens or req.max_new_tokens) - req.generated, 1)
-            self.running.append(SimSeq(req, kv_tokens=need - 1, remaining=rem))
+            fresh = req.generated == 0  # eviction resume restores KV, no prefill
+            pre = 0
+            if fresh and self.traits.prefill_chunk_tokens:
+                # mid-prefill evictions resume from their snapshot progress
+                pre = req.prompt_len - getattr(req, "_prefill_done", 0)
+            self.running.append(SimSeq(req, kv_tokens=need - 1, remaining=rem,
+                                       prefill_remaining=pre))
             self.kv_used += need - 1
             admitted += 1
-            if req.generated == 0:  # eviction resume restores KV, no prefill
+            if fresh:
                 prompt_tokens += req.prompt_len
         return admitted, prompt_tokens
 
@@ -173,16 +183,41 @@ class SimInstance:
         if hw is None or not self.running:
             self.busy_until = now + extra
             return self.busy_until, []
-        dur = extra + hw.decode_per_token
-        if admitted:
-            # prefill cost scales with admitted PROMPT tokens (the paper's
-            # §6 observation: per-input-token cost ≈ 100x below per-output-
-            # token cost; hw.prefill_time is per 1k prompt tokens)
-            dur += hw.prefill_time * (prompt_tokens / 1024.0)
-            self.stats.prefill_rounds += 1
+        chunk = self.traits.prefill_chunk_tokens
+        dur = extra
+        if chunk:
+            # chunked prefill (mirrors the real engine's step()): every
+            # mid-prefill sequence advances by at most ``chunk`` prompt
+            # tokens this iteration, THEN decode runs for the sequences that
+            # are prefill-complete — like the engine, a sequence finishing
+            # its final chunk decodes in the same quantum.
+            processed = 0
+            for seq in self.running:
+                if seq.prefill_remaining > 0:
+                    n = min(chunk, seq.prefill_remaining)
+                    seq.prefill_remaining -= n
+                    processed += n
+            if processed:
+                dur += hw.prefill_time * (processed / 1024.0)
+                self.stats.prefill_rounds += 1
+            if any(s.prefill_remaining == 0 for s in self.running):
+                # the engine's decode round is a no-op while every running
+                # sequence is still mid-prefill — don't charge d for it
+                dur += hw.decode_per_token
+        else:
+            dur += hw.decode_per_token
+            if admitted:
+                # lump accounting: prefill cost scales with admitted PROMPT
+                # tokens (the paper's §6 observation: per-input-token cost
+                # ≈ 100x below per-output-token cost; hw.prefill_time is per
+                # 1k prompt tokens)
+                dur += hw.prefill_time * (prompt_tokens / 1024.0)
+                self.stats.prefill_rounds += 1
         end = now + dur
         completed: List[Request] = []
         for seq in list(self.running):
+            if seq.prefill_remaining > 0:
+                continue  # still prefilling: no decode token this iteration
             seq.kv_tokens += 1
             self.kv_used += 1
             seq.remaining -= 1
@@ -219,6 +254,15 @@ class ClusterSimulator:
         traits = self.policy.traits
         if traits_override:
             traits = dataclasses.replace(traits, **traits_override)
+        if traits.prefill_chunk_tokens:
+            # keep the RWT hardware model coherent with the execution model:
+            # chunk-interleaved prefill changes both the iteration schedule
+            # AND the estimator's prefill term (hw.prefill_seconds)
+            instance_profiles = [
+                {m: dataclasses.replace(
+                    hw, prefill_chunk_tokens=traits.prefill_chunk_tokens)
+                 for m, hw in prof.items()}
+                for prof in instance_profiles]
         # SHEPHERD's waiting over-estimation: scale its view of drain times
         self.instances = [
             SimInstance(i, prof, traits, max_batch_requests)

@@ -1,0 +1,568 @@
+"""Chunked, length-bucketed prefill in the real engine: edge cases, chunk
+interleaving fairness, eviction-resume of partially-prefilled requests,
+chunk-granular KV allocation, and pallas-vs-xla backend parity."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHITECTURES
+from repro.core.request import Request
+from repro.models import build_model
+from repro.serving import ContinuousBatchingEngine, EngineConfig
+from repro.serving.kv_cache import BlockManager
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = ARCHITECTURES["granite-3-2b"].reduced(num_layers=2, d_model=128)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def swa_model():
+    cfg = ARCHITECTURES["h2o-danube-1.8b"].reduced(num_layers=2, d_model=128)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _mk_engine(model, params, **kw):
+    cfg = EngineConfig(**{"max_slots": 4, "max_seq_len": 64, **kw})
+    return ContinuousBatchingEngine(model, params, cfg, model_name="m1")
+
+
+def _req(prompt, n=8):
+    return Request(prompt_tokens=list(prompt), model="m1", slo=1e9,
+                   max_new_tokens=n)
+
+
+def _run_to_completion(eng, reqs, max_steps=200):
+    for _ in range(max_steps):
+        eng.step()
+        if all(r.finished() for r in reqs):
+            return
+    raise AssertionError("requests did not finish")
+
+
+def _legacy_tokens(model, params, prompt, n, **kw):
+    """Reference: the single-shot (chunking disabled) prefill path."""
+    eng = _mk_engine(model, params, prefill_chunk_tokens=0, **kw)
+    r = _req(prompt, n=n)
+    assert eng.admit(r)
+    _run_to_completion(eng, [r])
+    return r.output_tokens
+
+
+# ---------------------------------------------------------------------------
+# chunk-granular block allocation
+# ---------------------------------------------------------------------------
+
+def test_block_manager_extend():
+    bm = BlockManager(num_blocks=10, block_size=4)
+    bm.allocate(1, 3)                  # 1 block
+    assert bm.extend(1, 3)             # no-op (not shrinking either)
+    assert bm.free_blocks == 9
+    assert bm.extend(1, 9)             # grow to 3 blocks
+    assert bm.free_blocks == 7 and bm.seq_tokens(1) == 9
+    assert not bm.extend(1, 100)       # 25 blocks > capacity: refused
+    assert bm.seq_tokens(1) == 9       # unchanged on failure
+    bm.free(1)
+    assert bm.free_blocks == 10
+
+
+def test_admit_allocates_only_first_chunk(small_model):
+    _, model, params = small_model
+    eng = _mk_engine(model, params, prefill_chunk_tokens=8, block_size=4,
+                     max_seq_len=64)
+    r = _req(range(24), n=4)
+    assert eng.admit(r)
+    # only the first chunk (8 tokens = 2 blocks) is allocated at admission
+    assert eng.block_mgr.seq_tokens(r.req_id) == 8
+    eng.step()   # chunk 1 computed; chunk 2 not yet issued
+    assert eng.block_mgr.seq_tokens(r.req_id) == 8
+    eng.step()   # chunk 2 issued: allocation grows chunk-granularly
+    assert eng.block_mgr.seq_tokens(r.req_id) == 16
+    eng.step()   # final chunk: prompt + 1 slot for the first decode token
+    assert eng.block_mgr.seq_tokens(r.req_id) >= 25
+    _run_to_completion(eng, [r])
+    assert eng.block_mgr.used_blocks == 0
+
+
+# ---------------------------------------------------------------------------
+# edge cases vs the single-shot reference path
+# ---------------------------------------------------------------------------
+
+def test_prompt_shorter_than_one_chunk(small_model):
+    _, model, params = small_model
+    prompt = [5, 9, 2]
+    want = _legacy_tokens(model, params, prompt, n=6)
+    eng = _mk_engine(model, params, prefill_chunk_tokens=16)
+    r = _req(prompt, n=6)
+    assert eng.admit(r)
+    _run_to_completion(eng, [r])
+    assert r.output_tokens == want
+
+
+def test_prompt_exact_chunk_multiple(small_model):
+    _, model, params = small_model
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, 100, size=32).tolist()   # exactly 2 chunks of 16
+    want = _legacy_tokens(model, params, prompt, n=5)
+    eng = _mk_engine(model, params, prefill_chunk_tokens=16)
+    r = _req(prompt, n=5)
+    assert eng.admit(r)
+    assert eng.prefilling_slots() == [0]
+    eng.step()
+    assert int(eng.prefill_pos[0]) == 16 and not r.output_tokens
+    eng.step()
+    assert r.output_tokens            # final chunk emitted the first token
+    _run_to_completion(eng, [r])
+    assert r.output_tokens == want
+
+
+def test_first_token_completion_agrees_across_paths(small_model):
+    """max_new_tokens=1 completes with exactly one token on BOTH the legacy
+    single-shot path (finish check at admit) and the chunked path (finish
+    check on the final chunk)."""
+    _, model, params = small_model
+    prompt = [5, 9, 2]
+    outs = {}
+    for chunk in (0, 16):
+        eng = _mk_engine(model, params, prefill_chunk_tokens=chunk)
+        r = _req(prompt, n=1)
+        assert eng.admit(r)
+        for _ in range(5):
+            if r.finished():
+                break
+            eng.step()
+        assert r.finished()
+        assert eng.block_mgr.used_blocks == 0 and eng.num_active() == 0
+        outs[chunk] = list(r.output_tokens)
+    assert outs[0] == outs[16]
+    assert len(outs[0]) == 1
+
+
+def test_step_returns_admit_completed_requests(small_model):
+    """A request that finishes INSIDE admit() (legacy path, max_new=1)
+    must still appear in step()'s documented return value."""
+    _, model, params = small_model
+    eng = _mk_engine(model, params, prefill_chunk_tokens=0)
+    r = _req([5, 9, 2], n=1)
+    queue = [r]
+    eng.pull_source = lambda: queue.pop(0) if queue else None
+    done = eng.step()
+    assert r.finished()
+    assert done == [r]
+    assert eng.completed == [r]
+
+
+def test_direct_admit_completion_visible_without_step(small_model):
+    """A direct admit() that completes instantly must land in
+    engine.completed right away (a 'while num_active(): step()' drain loop
+    never runs), and the next step() returns it exactly once."""
+    _, model, params = small_model
+    eng = _mk_engine(model, params, prefill_chunk_tokens=0)
+    r = _req([5, 9, 2], n=1)
+    assert eng.admit(r)
+    assert r.finished() and eng.num_active() == 0
+    assert eng.completed == [r]
+    assert eng.step() == [r]          # returned once, not re-added
+    assert eng.completed == [r]
+    assert eng.step() == []
+
+
+def test_failed_prefill_leaves_engine_clean(small_model):
+    """An exception inside the single-shot prefill must not leave a corrupt
+    half-admitted slot behind (no slot occupancy, no block allocation)."""
+    _, model, params = small_model
+    eng = _mk_engine(model, params, prefill_chunk_tokens=0)
+
+    def boom(prompt, extras):
+        raise RuntimeError("device OOM")
+
+    eng._prefill_one = boom
+    r = _req([1, 2, 3], n=4)
+    with pytest.raises(RuntimeError):
+        eng.admit(r)
+    assert eng.num_active() == 0
+    assert eng.block_mgr.used_blocks == 0
+    assert not eng.block_mgr.has(r.req_id)
+    eng.step()                       # engine still serviceable
+    del eng._prefill_one             # restore the real method
+    assert eng.admit(r)
+    _run_to_completion(eng, [r])
+
+
+def test_sliding_window_chunked_matches_single_shot(swa_model):
+    """Rolling SWA cache: chunked prefill (incl. slot wrap for prompts past
+    the window) must reproduce the single-shot tokens."""
+    _, model, params = swa_model
+    rng = np.random.default_rng(2)
+    for plen in (20, 80):             # 80 > window (64): rolling wrap
+        prompt = rng.integers(0, 100, size=plen).tolist()
+        want = _legacy_tokens(model, params, prompt, n=4, max_seq_len=128)
+        eng = _mk_engine(model, params, prefill_chunk_tokens=16,
+                         max_seq_len=128)
+        r = _req(prompt, n=4)
+        assert eng.admit(r)
+        _run_to_completion(eng, [r])
+        assert r.output_tokens == want, plen
+
+
+def test_batched_multi_request_prefill(small_model):
+    """Several waiting prompts of different lengths prefill as ONE batched
+    call per step (length-bucketed padding), and each still produces the
+    single-shot tokens."""
+    _, model, params = small_model
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, 100, size=n).tolist() for n in (3, 17, 30)]
+    want = [_legacy_tokens(model, params, p, n=4) for p in prompts]
+    eng = _mk_engine(model, params, prefill_chunk_tokens=16)
+    reqs = [_req(p, n=4) for p in prompts]
+    for r in reqs:
+        assert eng.admit(r)
+    assert len(eng.prefilling_slots()) == 3
+    chunks0 = eng.stats.prefill_chunks
+    eng.step()
+    # one batched chunk round covered all three mid-prefill slots
+    assert eng.stats.prefill_chunks == chunks0 + 1
+    _run_to_completion(eng, reqs)
+    for r, w in zip(reqs, want):
+        assert r.output_tokens == w
+
+
+def test_bucket_resolution():
+    assert EngineConfig(prefill_chunk_tokens=128).resolved_buckets() == \
+        (16, 32, 64, 128)
+    assert EngineConfig(prefill_chunk_tokens=0).resolved_buckets() == ()
+    assert EngineConfig(prefill_chunk_tokens=100).resolved_buckets() == \
+        (16, 32, 64, 100)
+    # custom buckets are completed up to the chunk size so padding never
+    # falls back to exact (unbounded) lengths
+    assert EngineConfig(prefill_buckets=(64, 8),
+                        prefill_chunk_tokens=128).resolved_buckets() == \
+        (8, 64, 128)
+    assert EngineConfig(prefill_buckets=(8, 64),
+                        prefill_chunk_tokens=32).resolved_buckets() == (8, 64)
+
+
+def test_can_admit_accounts_for_owed_prefill_blocks(small_model):
+    """Admission reserves only the first chunk, but can_admit must count the
+    blocks still OWED to mid-prefill slots — two long prompts must not both
+    pass the check when only one fits."""
+    _, model, params = small_model
+    # 16 blocks * 4 = 64 tokens of KV; each 40-token prompt needs 11 blocks
+    eng = _mk_engine(model, params, prefill_chunk_tokens=8, block_size=4,
+                     kv_blocks=16, max_seq_len=64, max_slots=2)
+    r1 = _req(range(40), n=2)
+    r2 = _req(range(40), n=2)
+    assert eng.admit(r1)              # only 2 blocks allocated, 9 owed
+    assert not eng.can_admit(r2)      # 11 + 9 owed > 15 free-above-watermark
+    _run_to_completion(eng, [r1])
+    assert len(r1.output_tokens) == 2
+    assert eng.can_admit(r2)          # capacity back after r1 drained
+
+
+def test_swa_chunk_clamped_to_window(swa_model):
+    """A configured chunk larger than the SWA window must be clamped: one
+    chunk writing the same rolling slot twice would scatter
+    nondeterministically.  Tokens must still match the single-shot path."""
+    _, model, params = swa_model     # reduced window = 64
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, 100, size=100).tolist()
+    want = _legacy_tokens(model, params, prompt, n=4, max_seq_len=256)
+    eng = _mk_engine(model, params, prefill_chunk_tokens=128, max_seq_len=256)
+    assert eng._chunk_quantum() == 64
+    r = _req(prompt, n=4)
+    assert eng.admit(r)
+    eng.step()
+    assert int(eng.prefill_pos[0]) == 64   # clamped quantum
+    _run_to_completion(eng, [r])
+    assert r.output_tokens == want
+
+
+def test_preempted_request_becomes_repullable(small_model):
+    """Engine-internal OOM preemption resets _in_flight (simulator
+    _evict_seq parity) so a virtual-queue owner can re-pull the request."""
+    _, model, params = small_model
+    eng = _mk_engine(model, params, kv_blocks=3, block_size=4, max_slots=2)
+    r1 = _req([1, 2, 3], n=30)
+    r2 = _req([4, 5, 6], n=30)
+    assert eng.admit(r1)
+    eng.admit(r2)
+    r1._in_flight = r2._in_flight = True
+    for _ in range(30):
+        eng.step()
+        if eng.stats.preemptions:
+            break
+    assert eng.stats.preemptions >= 1
+    preempted = [r for r in (r1, r2) if r.snapshot is not None]
+    assert preempted and all(not r._in_flight for r in preempted)
+
+
+# ---------------------------------------------------------------------------
+# eviction-resume of a partially-prefilled request
+# ---------------------------------------------------------------------------
+
+def test_evict_resume_mid_prefill(small_model):
+    _, model, params = small_model
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, 100, size=24).tolist()
+
+    base = _mk_engine(model, params, prefill_chunk_tokens=8)
+    r_base = _req(prompt, n=8)
+    assert base.admit(r_base)
+    _run_to_completion(base, [r_base])
+
+    eng = _mk_engine(model, params, prefill_chunk_tokens=8)
+    r = _req(prompt, n=8)
+    assert eng.admit(r)
+    eng.step()                                   # one chunk done (8/24)
+    assert int(eng.prefill_pos[0]) == 8
+    ev = eng.evict_request(r.req_id)
+    assert ev is r and r.snapshot is not None
+    assert r.snapshot["prefill_pos"] == 8        # chunk progress snapshotted
+    assert r.generated == 0                      # no token yet
+    assert eng.block_mgr.used_blocks == 0
+
+    assert eng.admit(r)                          # resume: no prefill recompute
+    assert eng.stats.resumes == 1
+    assert int(eng.prefill_pos[0]) == 8          # continues from chunk 2
+    _run_to_completion(eng, [r])
+    assert r.output_tokens == r_base.output_tokens
+    assert r.n_evictions == 1
+
+
+def test_mid_prefill_snapshot_on_nonchunking_engine_recomputes(small_model):
+    """A mid-prefill snapshot re-admitted to an engine that cannot chunk
+    (prefill_chunk_tokens=0) must fall back to a full prefill recompute
+    instead of spinning on zero-token chunk rounds."""
+    _, model, params = small_model
+    rng = np.random.default_rng(8)
+    prompt = rng.integers(0, 100, size=24).tolist()
+    want = _legacy_tokens(model, params, prompt, n=6)
+
+    eng = _mk_engine(model, params, prefill_chunk_tokens=8)
+    r = _req(prompt, n=6)
+    assert eng.admit(r)
+    eng.step()
+    eng.evict_request(r.req_id)
+    assert r.snapshot["prefill_pos"] == 8
+
+    other = _mk_engine(model, params, prefill_chunk_tokens=0)
+    assert other.admit(r)
+    assert other.stats.resumes == 0 and other.stats.prefills == 1
+    _run_to_completion(other, [r])
+    assert r.output_tokens == want
+
+
+# ---------------------------------------------------------------------------
+# interleaving fairness: decode keeps flowing while a long prompt prefills
+# ---------------------------------------------------------------------------
+
+def test_decode_interleaves_with_prefill_chunks(small_model):
+    _, model, params = small_model
+    eng = _mk_engine(model, params, prefill_chunk_tokens=16, max_seq_len=128)
+    rng = np.random.default_rng(5)
+
+    short = _req(rng.integers(0, 100, size=4).tolist(), n=40)
+    assert eng.admit(short)
+    eng.step()
+    assert short.output_tokens                   # short req is decoding
+
+    long_req = _req(rng.integers(0, 100, size=48).tolist(), n=4)
+    assert eng.admit(long_req)                   # 3 chunks of 16
+    tokens_between_chunks = []
+    while eng.prefilling_slots():
+        before = len(short.output_tokens)
+        pos_before = int(eng.prefill_pos[eng.prefilling_slots()[0]])
+        eng.step()
+        gained = len(short.output_tokens) - before
+        tokens_between_chunks.append(gained)
+        assert int(eng.prefill_pos[1]) > pos_before or long_req.output_tokens
+    # the long prompt took several chunk rounds, and the active decode slot
+    # produced >= 1 token during EVERY one of them (the chunking papers'
+    # core co-scheduling property)
+    assert len(tokens_between_chunks) == 3
+    assert all(g >= 1 for g in tokens_between_chunks)
+    assert long_req.output_tokens                # long req got its first token
+    _run_to_completion(eng, [short, long_req])
+
+
+def test_mid_prefill_slot_state_consistent(small_model):
+    """Mid-prefill slots report lengths == prefill_pos (< prompt_len) and
+    are excluded from decode; decode-ready slots keep the old invariant."""
+    _, model, params = small_model
+    eng = _mk_engine(model, params, prefill_chunk_tokens=8)
+    r = _req(list(range(20)), n=4)
+    assert eng.admit(r)
+    eng.step()
+    (slot,) = eng.prefilling_slots()
+    assert int(eng.lengths[slot]) == int(eng.prefill_pos[slot]) == 8
+    assert eng.decode_slots() == []
+    _run_to_completion(eng, [r])
+
+
+# ---------------------------------------------------------------------------
+# attention backend selection
+# ---------------------------------------------------------------------------
+
+def test_pallas_backend_matches_xla_tokens():
+    cfg = ARCHITECTURES["granite-3-2b"].reduced(num_layers=1, d_model=64)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, 100, size=6).tolist() for _ in range(2)]
+
+    outs = {}
+    for backend in ("xla", "pallas"):
+        eng = _mk_engine(model, params, prefill_chunk_tokens=16,
+                         attention_backend=backend, max_slots=2)
+        reqs = [_req(p, n=4) for p in prompts]
+        for r in reqs:
+            assert eng.admit(r)
+        _run_to_completion(eng, reqs)
+        outs[backend] = [r.output_tokens for r in reqs]
+    # interpret-mode Pallas decode must match the XLA path token-for-token
+    assert outs["pallas"] == outs["xla"]
+
+
+def test_backend_override_is_bidirectional():
+    cfg = ARCHITECTURES["granite-3-2b"].reduced(num_layers=1, d_model=64)
+    model = build_model(cfg)
+    pallas_model = build_model(dataclasses.replace(cfg, use_pallas_attention=True))
+    params = model.init(jax.random.key(0))
+    # "pallas" forces the kernels on; "xla" forces them off; None respects
+    # whatever the model config says
+    assert _mk_engine(model, params,
+                      attention_backend="pallas").model.cfg.use_pallas_attention
+    assert not _mk_engine(pallas_model, params,
+                          attention_backend="xla").model.cfg.use_pallas_attention
+    assert _mk_engine(pallas_model, params).model is pallas_model
+    assert _mk_engine(model, params).model is model
+    with pytest.raises(ValueError):
+        _mk_engine(model, params, attention_backend="cuda")
+
+
+# ---------------------------------------------------------------------------
+# RWT prefill-term awareness
+# ---------------------------------------------------------------------------
+
+def test_hw_profile_prefill_seconds_chunk_aware():
+    from repro.core.rwt_estimator import (HardwareProfile, RWTEstimator,
+                                          WorkloadProfile)
+    hw_lump = HardwareProfile(prefill_time=0.2, decode_per_token=0.04,
+                              inefficiency=1.2, token_capacity=60_000,
+                              model_max_tokens=512)
+    hw_chunk = dataclasses.replace(hw_lump, prefill_chunk_tokens=256)
+    # no prompt length => the paper's constant P (legacy behavior unchanged)
+    assert hw_lump.prefill_seconds() == hw_chunk.prefill_seconds() == 0.2
+    # token-scaled: P is per 1k prompt tokens (simulator accounting)
+    assert hw_lump.prefill_seconds(1024) == pytest.approx(0.2)
+    assert hw_lump.prefill_seconds(2048) == pytest.approx(0.4)
+    # chunked: + one interleaved decode iteration per chunk
+    assert hw_chunk.prefill_seconds(1024) == pytest.approx(0.2 + 4 * 0.04)
+
+    est = RWTEstimator()
+    wl = WorkloadProfile(mu_input=1024, sigma_input=1.0,
+                         mu_output=128, sigma_output=1.0)
+    base = est.request_completion(3, wl, hw_chunk)
+    aware = est.request_completion(3, wl, hw_chunk, prompt_tokens=wl.mu_input)
+    assert aware.mean == pytest.approx(
+        base.mean - hw_chunk.prefill_time + hw_chunk.prefill_seconds(1024))
+    assert est.group_first_token_time(0, wl, hw_chunk, prompt_tokens=1024) \
+        == pytest.approx(hw_chunk.prefill_seconds(1024))
+    # group_drain_time (the global scheduler's term) honors it too
+    d0 = est.group_drain_time(4, wl, hw_chunk)
+    d1 = est.group_drain_time(4, wl, hw_chunk, prompt_tokens=wl.mu_input)
+    assert d1.mean == pytest.approx(
+        d0.mean - hw_chunk.prefill_time + hw_chunk.prefill_seconds(1024))
+
+
+def test_sim_chunked_prefill_accounting():
+    """Simulator mirror of the engine: no decode charge while every running
+    sequence is mid-prefill, and mid-prefill evictions resume from their
+    chunk progress instead of recomputing the whole prompt."""
+    from repro.core.policies import make_policy
+    from repro.core.request import make_request
+    from repro.core.request_group import RequestGroup
+    from repro.core.rwt_estimator import HardwareProfile
+    from repro.sim.simulator import SimInstance
+
+    traits = dataclasses.replace(make_policy("qlm").traits,
+                                 prefill_chunk_tokens=16)
+    hw = HardwareProfile(prefill_time=1.024, decode_per_token=0.5,
+                         inefficiency=1.0, token_capacity=4096,
+                         swap_time=2.0, model_max_tokens=64)
+    inst = SimInstance(0, {"m": hw}, traits)
+    req = make_request(list(range(64)), "m", "batch1", max_new_tokens=4)
+    req.true_output_tokens = 4
+    g = RequestGroup(model="m", slo=60.0)
+    g.add(req)
+    inst.vq.set_order([g])
+
+    end, done = inst.iteration(0.0)
+    (seq,) = inst.running
+    assert seq.prefill_remaining == 48          # one 16-token chunk done
+    assert req.generated == 0                   # no decode token yet
+    # cold load (2.0) + chunk prefill (1.024 * 16/1024) — and NO 0.5 decode
+    # charge, because the engine's decode round is a no-op here
+    assert end == pytest.approx(2.0 + 1.024 * 16 / 1024)
+
+    inst._evict_seq(seq)
+    assert req._prefill_done == 16
+    end2, _ = inst.iteration(end)
+    (seq2,) = inst.running
+    # resumed from the snapshot: only 48 - 16 tokens left, not 64 - 16
+    assert seq2.prefill_remaining == 32
+
+    end3, _ = inst.iteration(end2)
+    end4, _ = inst.iteration(end3)
+    # the final chunk and the first decode token share one quantum (engine
+    # parity: the chunk round precedes the decode round in the same step)
+    assert seq2.prefill_remaining == 0 and req.generated == 1
+    assert end4 - end3 == pytest.approx(1.024 * 16 / 1024 + 0.5)
+
+
+def test_cluster_sim_propagates_chunking_into_profiles():
+    """Chunked execution (PolicyTraits) must also flip the RWT hardware
+    model (HardwareProfile.prefill_chunk_tokens) so drain estimates match
+    what the instances actually do."""
+    from repro.sim import ClusterSimulator, profiles_for
+    sim = ClusterSimulator([profiles_for("a100", ["vicuna-13b"])], "qlm",
+                           traits_override={"prefill_chunk_tokens": 256})
+    assert sim.instances[0].hw_by_model["vicuna-13b"].prefill_chunk_tokens == 256
+    sim2 = ClusterSimulator([profiles_for("a100", ["vicuna-13b"])], "qlm")
+    assert sim2.instances[0].hw_by_model["vicuna-13b"].prefill_chunk_tokens is None
+
+
+def test_calibrate_from_engine_propagates_chunking(small_model):
+    from repro.sim.profiles import calibrate_from_engine
+    _, model, params = small_model
+    eng = _mk_engine(model, params, prefill_chunk_tokens=16)
+    hw = calibrate_from_engine(eng, token_capacity=256)
+    assert hw.prefill_chunk_tokens == 16
+    eng2 = _mk_engine(model, params, prefill_chunk_tokens=0)
+    hw2 = calibrate_from_engine(eng2, token_capacity=256)
+    assert hw2.prefill_chunk_tokens is None
+
+
+# ---------------------------------------------------------------------------
+# kv-quant cache works through the chunked path
+# ---------------------------------------------------------------------------
+
+def test_kv_quant_chunked_prefill_smoke():
+    cfg = dataclasses.replace(
+        ARCHITECTURES["granite-3-2b"].reduced(num_layers=1, d_model=64),
+        kv_quant=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    eng = _mk_engine(model, params, prefill_chunk_tokens=8)
+    r = _req(list(range(20)), n=4)
+    assert eng.admit(r)
+    _run_to_completion(eng, [r])
+    assert len(r.output_tokens) == 4

@@ -3,6 +3,7 @@ must preserve the block-accounting and slot invariants."""
 import jax
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: property tests only
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.configs import ARCHITECTURES
@@ -23,10 +24,13 @@ def _invariants(eng: ContinuousBatchingEngine):
     for r in active:
         assert bm.has(r.req_id)
     assert len(active) == len(bm._seqs)
-    # lengths nonzero iff slot active
+    # lengths nonzero iff slot active; mid-prefill slots track chunk progress
     for i, r in enumerate(eng.slots):
         if r is None:
             assert eng.lengths[i] == 0
+            assert eng.prefill_pos[i] == 0
+        elif eng.prefill_pos[i] < r.prompt_len:
+            assert eng.lengths[i] == eng.prefill_pos[i]
         else:
             assert eng.lengths[i] >= r.prompt_len
 

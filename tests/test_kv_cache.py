@@ -1,5 +1,6 @@
 """BlockManager unit + property tests (paged-KV accounting invariants)."""
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: property tests only
 from hypothesis import given, settings, strategies as st
 
 from repro.serving.kv_cache import BlockManager, OutOfBlocksError

@@ -1,6 +1,7 @@
 """Request-group formation (paper §4, Algorithm 1)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: property tests only
 from hypothesis import given, settings, strategies as st
 
 from repro.core.request import make_request

@@ -2,6 +2,7 @@
 import random
 
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: property tests only
 from hypothesis import given, settings, strategies as st
 
 from repro.core.solver import (GroupSpec, InstanceSpec, branch_and_bound,
