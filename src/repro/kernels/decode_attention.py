@@ -9,6 +9,13 @@ term, see EXPERIMENTS.md §Roofline).
 
 Per-sequence ``lengths`` masking supports ragged continuous batches; blocks
 entirely past ``lengths[b]`` skip compute via ``pl.when``.
+
+Length convention (shared by BOTH the float and the int8 kernel, and by the
+paged variants in ``paged_decode_attention.py``): ``lengths[b]`` counts
+every valid cache slot INCLUDING the token written this decode step — the
+caller writes the new token's k/v at slot ``pos`` and passes ``pos + 1``.
+``attend_decode`` computes this once (``kv_valid``) and feeds every backend
+from it, so the quant / non-quant / paged paths cannot drift apart.
 """
 from __future__ import annotations
 
@@ -116,7 +123,11 @@ def decode_attention_quant(q: jax.Array, k: jax.Array, v: jax.Array,
                            lengths: jax.Array, *,
                            block_k: int = DEFAULT_BLOCK_K,
                            interpret: bool = False) -> jax.Array:
-    """q: (B, H, D); k/v int8 (B, KVH, S, D); scales (B, KVH, S)."""
+    """q: (B, H, D); k/v int8 (B, KVH, S, D); scales (B, KVH, S).
+
+    ``lengths`` uses the same inclusive convention as ``decode_attention``:
+    it COUNTS the newest token (whose k/v sits at slot ``lengths - 1``).
+    """
     B, H, D = q.shape
     KVH, S = k.shape[1], k.shape[2]
     assert H % KVH == 0

@@ -13,6 +13,10 @@ import jax.numpy as jnp
 
 from repro.kernels.decode_attention import decode_attention as _decode_attention
 from repro.kernels.flash_attention import flash_attention as _flash_attention
+from repro.kernels.paged_decode_attention import (
+    paged_decode_attention as _paged_decode_attention,
+    paged_decode_attention_quant as _paged_decode_attention_quant,
+)
 from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
 
 
@@ -35,6 +39,24 @@ def decode_attention(q, k, v, lengths, *, block_k: int = 256,
                      interpret: bool | None = None):
     interp = _default_interpret() if interpret is None else interpret
     return _decode_attention(q, k, v, lengths, block_k=block_k, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_pages, v_pages, block_table, lengths, *,
+                           interpret: bool | None = None):
+    interp = _default_interpret() if interpret is None else interpret
+    return _paged_decode_attention(q, k_pages, v_pages, block_table, lengths,
+                                   interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention_quant(q, k_pages, v_pages, k_scale_pages,
+                                 v_scale_pages, block_table, lengths, *,
+                                 interpret: bool | None = None):
+    interp = _default_interpret() if interpret is None else interpret
+    return _paged_decode_attention_quant(q, k_pages, v_pages, k_scale_pages,
+                                         v_scale_pages, block_table, lengths,
+                                         interpret=interp)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

@@ -1,0 +1,265 @@
+"""Pallas TPU paged decode-attention kernel (PagedAttention-style KV).
+
+The KV cache is a single global page pool shared by every sequence in the
+engine:
+
+  k_pages / v_pages : (num_blocks, KVH, block_size, D)
+
+Each sequence owns a list of physical pages named by its ``BlockManager``
+block table; logical token position ``p`` of sequence ``b`` lives in page
+``block_table[b, p // block_size]`` at row ``p % block_size``.  Pages are
+physically non-contiguous, so the eviction / swapping / admission LSOs can
+reclaim and reassign HBM at block granularity instead of per-slot
+``max_seq_len`` stripes.
+
+Grid (batch, kv_head, logical_block).  The block table and per-sequence
+``lengths`` ride in scalar-prefetch SMEM (``PrefetchScalarGridSpec``), so
+the k/v ``index_map`` can translate the logical block id into a physical
+page id BEFORE the DMA is issued — the gather happens in the pipeline's
+address computation, not as a materialized copy.  As in the dense kernel,
+the whole GQA head-group's queries ride along in one tile and blocks fully
+past ``lengths[b]`` skip compute via ``pl.when``.
+
+``lengths`` counts every valid cache slot INCLUDING the newest token (the
+same inclusive convention as ``decode_attention`` /
+``decode_attention_quant`` — see those docstrings).
+
+Follow-on (ROADMAP): fetch several pages per grid step so small
+``block_size`` pools still feed the MXU with full tiles.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pallas_compat import CompilerParams as _CompilerParams
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_scr, l_scr, acc_scr, *, scale: float,
+                         block_size: int):
+    del bt_ref  # consumed by the index_maps (page translation), not the body
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+    nb = pl.num_programs(2)
+    length = len_ref[b]  # valid tokens in this sequence (incl. newest)
+
+    @pl.when(i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    k_start = i * block_size
+
+    @pl.when(k_start < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)      # (group, d)
+        k = k_ref[0, 0].astype(jnp.float32)      # (block_size, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < length, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(i == nb - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-20)
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def _paged_decode_quant_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, ks_ref,
+                               vs_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                               scale: float, block_size: int):
+    """int8 page pool: per-row scales live in their own scale pages and the
+    dequant happens in VMEM (the HBM read stays int8 + scales)."""
+    del bt_ref
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+    nb = pl.num_programs(2)
+    length = len_ref[b]
+
+    @pl.when(i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    k_start = i * block_size
+
+    @pl.when(k_start < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        ks = ks_ref[0, 0].astype(jnp.float32)    # (block_size,)
+        vs = vs_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32) * ks[:, None]
+        v = v_ref[0, 0].astype(jnp.float32) * vs[:, None]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < length, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(i == nb - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-20)
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def _clamp_table(block_table: jax.Array, num_blocks: int) -> jax.Array:
+    """Sentinel entries (>= num_blocks, marking unallocated logical blocks)
+    are clamped to a real page so the prefetched index_map never addresses
+    out of range; their contents are masked out by ``lengths``."""
+    return jnp.minimum(block_table.astype(jnp.int32), num_blocks - 1)
+
+
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, block_table: jax.Array,
+                           lengths: jax.Array, *,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, H, D); k_pages/v_pages: (N, KVH, bs, D); block_table: (B, nb)
+    physical page ids per logical block (entries >= N are sentinels for
+    unallocated blocks); lengths: (B,) valid tokens INCLUDING the newest.
+    Returns (B, H, D)."""
+    B, H, D = q.shape
+    N, KVH, bs, _ = k_pages.shape
+    nb = block_table.shape[1]
+    assert H % KVH == 0
+    group = H // KVH
+    scale = 1.0 / math.sqrt(D)
+
+    qg = q.reshape(B, KVH, group, D)
+    bt = _clamp_table(block_table, N)
+
+    kernel = functools.partial(_paged_decode_kernel, scale=scale,
+                               block_size=bs)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # block table + lengths, prefetched to SMEM
+        grid=(B, KVH, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, D),
+                         lambda b, h, i, bt_ref, len_ref: (b, h, 0, 0)),
+            # logical block i of sequence b -> physical page bt[b, i]
+            pl.BlockSpec((1, 1, bs, D),
+                         lambda b, h, i, bt_ref, len_ref:
+                         (bt_ref[b, i], h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, D),
+                         lambda b, h, i, bt_ref, len_ref:
+                         (bt_ref[b, i], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, D),
+                               lambda b, h, i, bt_ref, len_ref: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KVH, group, D), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(bt, lengths.astype(jnp.int32), qg, k_pages, v_pages)
+    return out.reshape(B, H, D)
+
+
+def paged_decode_attention_quant(q: jax.Array, k_pages: jax.Array,
+                                 v_pages: jax.Array, k_scale_pages: jax.Array,
+                                 v_scale_pages: jax.Array,
+                                 block_table: jax.Array, lengths: jax.Array, *,
+                                 interpret: bool = False) -> jax.Array:
+    """int8 variant: k/v pages int8 (N, KVH, bs, D), scale pages
+    (N, KVH, bs).  Same block-table / lengths conventions as
+    ``paged_decode_attention``."""
+    B, H, D = q.shape
+    N, KVH, bs, _ = k_pages.shape
+    nb = block_table.shape[1]
+    assert H % KVH == 0
+    group = H // KVH
+    scale = 1.0 / math.sqrt(D)
+
+    qg = q.reshape(B, KVH, group, D)
+    bt = _clamp_table(block_table, N)
+
+    kernel = functools.partial(_paged_decode_quant_kernel, scale=scale,
+                               block_size=bs)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KVH, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, D),
+                         lambda b, h, i, bt_ref, len_ref: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, D),
+                         lambda b, h, i, bt_ref, len_ref:
+                         (bt_ref[b, i], h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, D),
+                         lambda b, h, i, bt_ref, len_ref:
+                         (bt_ref[b, i], h, 0, 0)),
+            pl.BlockSpec((1, 1, bs),
+                         lambda b, h, i, bt_ref, len_ref: (bt_ref[b, i], h, 0)),
+            pl.BlockSpec((1, 1, bs),
+                         lambda b, h, i, bt_ref, len_ref: (bt_ref[b, i], h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, D),
+                               lambda b, h, i, bt_ref, len_ref: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KVH, group, D), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(bt, lengths.astype(jnp.int32), qg, k_pages, v_pages,
+      k_scale_pages, v_scale_pages)
+    return out.reshape(B, H, D)
+
+
+def gather_kv_pages(pages: jax.Array, block_table: jax.Array) -> jax.Array:
+    """XLA gather path: densify a sequence's pages via its block table.
+
+    pages: (N, KVH, bs, D) [or (N, KVH, bs) for scales]; block_table:
+    (B, nb) with sentinel entries >= N (clamped — their garbage contents
+    must be masked by ``lengths`` downstream).
+    Returns (B, KVH, nb * bs, D) [or (B, KVH, nb * bs)]: logical position p
+    lands at row p (= block p // bs, offset p % bs).
+    """
+    N = pages.shape[0]
+    g = pages[_clamp_table(block_table, N)]   # (B, nb, KVH, bs, ...)
+    g = jnp.moveaxis(g, 2, 1)                 # (B, KVH, nb, bs, ...)
+    B, KVH, nb, bs = g.shape[:4]
+    return g.reshape((B, KVH, nb * bs) + g.shape[4:])

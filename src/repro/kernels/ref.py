@@ -43,6 +43,22 @@ def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     return o.reshape(B, H, D).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q: jax.Array, k_pages: jax.Array,
+                               v_pages: jax.Array, block_table: jax.Array,
+                               lengths: jax.Array) -> jax.Array:
+    """XLA gather oracle for the paged kernel: densify each sequence's pages
+    through its block table, then run the dense decode reference.
+
+    q: (B, H, D); k_pages/v_pages: (N, KVH, bs, D); block_table: (B, nb)
+    physical page ids (sentinel entries >= N allowed — masked by lengths);
+    lengths: (B,) valid tokens INCLUDING the newest one.
+    """
+    from repro.kernels.paged_decode_attention import gather_kv_pages
+    k = gather_kv_pages(k_pages, block_table)
+    v = gather_kv_pages(v_pages, block_table)
+    return decode_attention_ref(q, k, v, lengths)
+
+
 def ssd_scan_ref(x, dt, A, Bm, Cm):
     """Naive recurrent SSD (same contract as kernels.ssd_scan, zero init)."""
     from repro.models.ssm import ssd_recurrent_reference

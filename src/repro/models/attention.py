@@ -6,10 +6,16 @@ Three entry points per block:
   * ``attend_decode``  — one query token against the cache (per-sequence
                          lengths; continuous batching friendly).
 
-The KV cache is a dict ``{"k": (B, KVH, S, D), "v": (B, KVH, S, D)}`` plus
-per-sequence ``lengths`` carried by the caller.  Sliding-window models keep
-a rolling cache of size ``window`` (write index = pos % window), so the
-``long_500k`` shape materializes only O(window) memory.
+The dense KV cache is a dict ``{"k": (B, KVH, S, D), "v": (B, KVH, S, D)}``
+plus per-sequence ``lengths`` carried by the caller.  Sliding-window models
+keep a rolling cache of size ``window`` (write index = pos % window), so
+the ``long_500k`` shape materializes only O(window) memory.
+
+The paged serving twins (``attend_decode_paged`` /
+``attend_prefill_chunk_paged``) replace the per-slot arrays with a global
+page pool ``{"k": (num_blocks, KVH, block_size, D), ...}`` addressed
+through per-sequence block tables (full attention only — see
+``init_paged_kv_cache``).
 """
 from __future__ import annotations
 
@@ -155,6 +161,26 @@ def init_kv_cache(cfg, batch: int, max_seq: int, dtype=jnp.float32) -> Dict[str,
     S = cache_len(cfg, max_seq)
     hd = cfg.resolved_head_dim
     shape = (batch, cfg.num_kv_heads, S, hd)
+    if cfg.kv_quant:
+        return {"k": jnp.zeros(shape, jnp.int8), "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:-1], dtype),
+                "v_scale": jnp.zeros(shape[:-1], dtype)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def init_paged_kv_cache(cfg, num_blocks: int, block_size: int,
+                        dtype=jnp.float32) -> Dict[str, jax.Array]:
+    """Global KV page pool (PagedAttention layout), one per layer.
+
+    Unlike ``init_kv_cache`` there is NO per-slot batch axis: every sequence
+    in the engine shares the pool and owns pages named by its
+    ``BlockManager`` block table, so engine KV capacity is
+    ``num_blocks * block_size`` tokens total rather than
+    ``max_slots * max_seq_len``.  Logical position ``p`` of a sequence lives
+    in page ``block_table[p // block_size]`` at row ``p % block_size``.
+    """
+    hd = cfg.resolved_head_dim
+    shape = (num_blocks, cfg.num_kv_heads, block_size, hd)
     if cfg.kv_quant:
         return {"k": jnp.zeros(shape, jnp.int8), "v": jnp.zeros(shape, jnp.int8),
                 "k_scale": jnp.zeros(shape[:-1], dtype),
@@ -339,6 +365,14 @@ def attend_decode(params, cfg, x: jax.Array, lengths: jax.Array,
         new_k = cache["k"].at[batch_idx, :, slot, :].set(k_new)
         new_v = cache["v"].at[batch_idx, :, slot, :].set(v_new)
 
+    # ONE length convention for every decode backend: the cache now holds
+    # kv_valid = lengths + 1 tokens (the new token's k/v was just written at
+    # slot `lengths`), and the kernels/masks below all consume kv_valid.
+    # The kernel-side contract (count INCLUDES the newest token) is
+    # documented in kernels/decode_attention.py and locked in by the
+    # quant-vs-float parity tests.
+    kv_valid = lengths + 1
+
     # Pallas decode kernel path: blocked KV streaming, per-seq lengths
     # masking (incl. fused int8 dequant).  Rolling SWA caches keep the XLA
     # path (slot-validity masking is window-specific).
@@ -350,9 +384,9 @@ def attend_decode(params, cfg, x: jax.Array, lengths: jax.Array,
             interp = jax.default_backend() != "tpu"
             attn = decode_attention_quant(
                 q1, new_cache["k"], new_cache["v"], new_cache["k_scale"],
-                new_cache["v_scale"], lengths + 1, interpret=interp)
+                new_cache["v_scale"], kv_valid, interpret=interp)
         else:
-            attn = kernel_ops.decode_attention(q1, new_k, new_v, lengths + 1)
+            attn = kernel_ops.decode_attention(q1, new_k, new_v, kv_valid)
         out = attn[:, None].reshape(B, 1, cfg.num_heads * hd)
         proj = out @ params["wo"]
         return (proj, new_cache) if cfg.kv_quant else (proj, {"k": new_k, "v": new_v})
@@ -367,12 +401,164 @@ def attend_decode(params, cfg, x: jax.Array, lengths: jax.Array,
         valid = (abs_pos >= 0) & (abs_pos >= lengths[:, None] - (S - 1))
         mask = valid[:, None, None, :]  # (B,1,1,S)
     else:
-        mask = (kv_pos <= lengths[:, None])[:, None, None, :]
+        mask = (kv_pos < kv_valid[:, None])[:, None, None, :]
     out = _sdpa(qh, new_k, new_v, mask)
     out = out.transpose(0, 2, 1, 3).reshape(B, 1, cfg.num_heads * hd)
     if cfg.kv_quant:
         return out @ params["wo"], new_cache
     return out @ params["wo"], {"k": new_k, "v": new_v}
+
+
+# ---------------------------------------------------------------------------
+# paged KV (block-table) serving paths — full attention only
+# ---------------------------------------------------------------------------
+
+def _paged_dims(cache: Dict[str, jax.Array]) -> Tuple[int, int]:
+    """(num_blocks, block_size) of a page-pool cache layer."""
+    return cache["k"].shape[0], cache["k"].shape[2]
+
+
+def _write_pages(cfg, cache: Dict[str, jax.Array], k: jax.Array,
+                 v: jax.Array, page: jax.Array,
+                 offset: jax.Array) -> Dict[str, jax.Array]:
+    """Scatter per-token k/v (..., KVH, D) into pages at (page, offset).
+
+    ``page``/``offset`` index arrays share the leading dims of k/v; sentinel
+    page ids (>= num_blocks) drop the write (inactive batch rows, logical
+    blocks not yet allocated).
+    """
+    if cfg.kv_quant:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        return {
+            "k": cache["k"].at[page, :, offset, :].set(kq, mode="drop"),
+            "v": cache["v"].at[page, :, offset, :].set(vq, mode="drop"),
+            "k_scale": cache["k_scale"].at[page, :, offset].set(ks, mode="drop"),
+            "v_scale": cache["v_scale"].at[page, :, offset].set(vs, mode="drop"),
+        }
+    return {
+        "k": cache["k"].at[page, :, offset, :].set(k, mode="drop"),
+        "v": cache["v"].at[page, :, offset, :].set(v, mode="drop"),
+    }
+
+
+def _gather_dense_kv(cfg, cache: Dict[str, jax.Array], block_table: jax.Array,
+                     dtype) -> Tuple[jax.Array, jax.Array]:
+    """Densify a page pool through block tables -> (B, KVH, nb*bs, D) k/v
+    (dequantized for int8 pools).  The XLA reference path on CPU; positions
+    past each sequence's length hold garbage the caller must mask."""
+    from repro.kernels.paged_decode_attention import gather_kv_pages
+    k = gather_kv_pages(cache["k"], block_table)
+    v = gather_kv_pages(cache["v"], block_table)
+    if cfg.kv_quant:
+        k = _dequantize_kv(k, gather_kv_pages(cache["k_scale"], block_table), dtype)
+        v = _dequantize_kv(v, gather_kv_pages(cache["v_scale"], block_table), dtype)
+    return k, v
+
+
+def attend_decode_paged(params, cfg, x: jax.Array, lengths: jax.Array,
+                        block_table: jax.Array,
+                        cache: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode against the paged KV pool.
+
+    x: (B, 1, d); lengths: (B,) tokens already cached (= the new token's
+    absolute position); block_table: (B, nb) physical page ids, sentinel
+    entries >= num_blocks marking unallocated logical blocks; cache: page
+    pool from ``init_paged_kv_cache``.  Requires full attention
+    (``cfg.sliding_window is None`` — rolling-window paging is a ROADMAP
+    follow-on).
+
+    The new token's k/v is scattered into page ``block_table[b, pos // bs]``
+    row ``pos % bs``; rows whose write page is unallocated (inactive slots,
+    mid-prefill rows at a block boundary) drop the write via the sentinel.
+    """
+    B = x.shape[0]
+    num_blocks, bs = _paged_dims(cache)
+    nb = block_table.shape[1]
+    hd = cfg.resolved_head_dim
+    q, k, v = _project_qkv(params, cfg, x, lengths[:, None])
+    k_new = k[:, 0]  # (B, KVH, D)
+    v_new = v[:, 0]
+
+    logical = lengths // bs
+    offset = lengths % bs
+    page = jnp.take_along_axis(
+        block_table, jnp.minimum(logical, nb - 1)[:, None], axis=1)[:, 0]
+    page = jnp.where(logical < nb, page, num_blocks)  # sentinel => dropped
+    new_cache = _write_pages(cfg, cache, k_new, v_new, page, offset)
+
+    # same inclusive convention as the dense path: the pool now holds
+    # kv_valid tokens for each row, newest at logical position `lengths`
+    kv_valid = lengths + 1
+    q1 = q[:, 0]  # (B, H, D)
+    if cfg.use_pallas_attention:
+        from repro.kernels import ops as kernel_ops
+        if cfg.kv_quant:
+            attn = kernel_ops.paged_decode_attention_quant(
+                q1, new_cache["k"], new_cache["v"], new_cache["k_scale"],
+                new_cache["v_scale"], block_table, kv_valid)
+        else:
+            attn = kernel_ops.paged_decode_attention(
+                q1, new_cache["k"], new_cache["v"], block_table, kv_valid)
+    else:
+        k_dense, v_dense = _gather_dense_kv(cfg, new_cache, block_table, x.dtype)
+        mask = (jnp.arange(nb * bs)[None, :] < kv_valid[:, None])[:, None, None, :]
+        attn = _sdpa(q.transpose(0, 2, 1, 3), k_dense, v_dense, mask)[:, :, 0]
+    out = attn[:, None].reshape(B, 1, cfg.num_heads * hd)
+    return out @ params["wo"], new_cache
+
+
+def attend_prefill_chunk_paged(params, cfg, x: jax.Array,
+                               positions: jax.Array, valid: jax.Array,
+                               block_table: jax.Array,
+                               cache: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Chunk-granular prefill continuation writing into the paged KV pool.
+
+    Same contract as ``attend_prefill_chunk`` (x: (B, C, d) right-padded
+    chunk, positions absolute, valid: (B,) real tokens per row, 0 =
+    inactive) except the chunk's k/v scatter to (page, offset) pairs named
+    by ``block_table`` instead of per-slot dense rows.  Full attention only.
+
+    The attention itself densifies the PRE-chunk pages with an XLA gather
+    (prefill is compute-bound; only the decode hot loop gets the Pallas
+    block-table kernel) and appends the in-chunk keys, exactly mirroring the
+    dense chunk path's two-segment masking.
+    """
+    B, C, _ = x.shape
+    num_blocks, bs = _paged_dims(cache)
+    nb = block_table.shape[1]
+    S = nb * bs
+    hd = cfg.resolved_head_dim
+    q, k, v = _project_qkv(params, cfg, x, positions)  # k/v: (B, C, KVH, hd)
+    starts = positions[:, 0]
+
+    # ---- page writes: token (b, j) -> page bt[b, pos//bs], row pos%bs ----
+    in_chunk = jnp.arange(C)[None, :] < valid[:, None]           # (B, C)
+    logical = positions // bs
+    offset = positions % bs
+    page = jnp.take_along_axis(block_table, jnp.clip(logical, 0, nb - 1), axis=1)
+    page = jnp.where(in_chunk & (logical < nb), page, num_blocks)
+    new_cache = _write_pages(cfg, cache, k, v, page, offset)
+
+    # ---- attention: [pre-chunk pages | in-chunk keys] --------------------
+    old_k, old_v = _gather_dense_kv(cfg, cache, block_table, x.dtype)
+    qh = q.transpose(0, 2, 1, 3)                                 # (B, H, C, hd)
+    kh = k.transpose(0, 2, 1, 3)                                 # (B, KVH, C, hd)
+    vh = v.transpose(0, 2, 1, 3)
+    k_all = jnp.concatenate([old_k, kh], axis=2)                 # (B, KVH, S+C, hd)
+    v_all = jnp.concatenate([old_v, vh], axis=2)
+
+    q_pos = positions[:, :, None]                                # (B, C, 1)
+    s_idx = jnp.arange(S)[None, None, :]                         # (1, 1, S)
+    cache_mask = jnp.broadcast_to(s_idx < starts[:, None, None], (B, C, S))
+    j_idx = jnp.arange(C)[None, None, :]
+    p_j = starts[:, None, None] + j_idx
+    chunk_mask = (p_j <= q_pos) & (j_idx < valid[:, None, None])
+    mask = jnp.concatenate([cache_mask, chunk_mask], axis=-1)[:, None]
+
+    out = _sdpa(qh, k_all, v_all, mask)
+    out = out.transpose(0, 2, 1, 3).reshape(B, C, cfg.num_heads * hd)
+    return out @ params["wo"], new_cache
 
 
 def attention_param_axes(cfg):

@@ -37,6 +37,16 @@ class Model:
     # (last-valid-position logits, cache); None = arch needs single-shot
     # prefill (SSM/hybrid state carry, enc-dec cross attention).
     prefill_chunk: Optional[Callable] = None
+    # Paged-KV serving paths (block-table page pool instead of per-slot
+    # dense arrays); None = arch has no pageable KV (SSM state, hybrid,
+    # enc-dec cross attention).  Signatures mirror the dense twins plus a
+    # (B, num_blocks_per_seq) block_table argument:
+    #   init_paged_cache(num_blocks, block_size, dtype) -> cache pytree
+    #   decode_step_paged(params, cache, tokens, lengths, block_table)
+    #   prefill_chunk_paged(params, cache, tokens, starts, valid, block_table)
+    init_paged_cache: Optional[Callable] = None
+    decode_step_paged: Optional[Callable] = None
+    prefill_chunk_paged: Optional[Callable] = None
 
     def eval_shape_params(self, dtype=jnp.float32):
         """Param ShapeDtypeStructs without allocation (for the dry-run)."""
@@ -86,6 +96,14 @@ def _build_transformer(cfg):
             transformer.decode_step(params, cfg, tokens, lengths, cache),
         prefill_chunk=lambda params, cache, tokens, starts, valid:
             transformer.prefill_chunk(params, cfg, tokens, starts, valid, cache),
+        init_paged_cache=lambda num_blocks, block_size, dtype=jnp.float32:
+            transformer.init_paged_cache(cfg, num_blocks, block_size, dtype),
+        decode_step_paged=lambda params, cache, tokens, lengths, block_table:
+            transformer.decode_step_paged(params, cfg, tokens, lengths,
+                                          block_table, cache),
+        prefill_chunk_paged=lambda params, cache, tokens, starts, valid, block_table:
+            transformer.prefill_chunk_paged(params, cfg, tokens, starts,
+                                            valid, block_table, cache),
     )
 
 

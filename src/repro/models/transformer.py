@@ -245,6 +245,80 @@ def prefill_chunk(params, cfg, tokens: jax.Array, starts: jax.Array,
     return unembed(params, cfg, x_last), new_cache
 
 
+def init_paged_cache(cfg, num_blocks: int, block_size: int,
+                     dtype=jnp.float32):
+    """Stacked per-layer KV page pool: leaves (layers, num_blocks, KVH,
+    block_size, D) — no per-slot batch axis; sequences share the pool via
+    their block tables."""
+    one = attention.init_paged_kv_cache(cfg, num_blocks, block_size, dtype)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape), one)
+
+
+def _block_prefill_chunk_paged(cfg, x, positions, valid, block_table, bp,
+                               cache_layer):
+    h = layers.rms_norm(x, bp["attn_norm"], cfg.rms_norm_eps)
+    a, new_cache = attention.attend_prefill_chunk_paged(
+        bp["attn"], cfg, h, positions, valid, block_table, cache_layer)
+    x = x + a
+    h = layers.rms_norm(x, bp["mlp_norm"], cfg.rms_norm_eps)
+    if cfg.moe is not None:
+        out, _ = moe_lib.apply_moe(bp["moe"], cfg, h)
+    else:
+        out = layers.swiglu_mlp(bp["mlp"], h)
+    return x + out, new_cache
+
+
+def prefill_chunk_paged(params, cfg, tokens: jax.Array, starts: jax.Array,
+                        valid: jax.Array, block_table: jax.Array, cache):
+    """``prefill_chunk`` against the paged KV pool: same contract, plus the
+    per-sequence ``block_table`` (B, nb) naming the pages each row's chunk
+    writes into (one table for all layers — each layer has its own pool)."""
+    x = embed_tokens(params, cfg, tokens)
+    B, C, _ = x.shape
+    positions = starts[:, None] + jnp.arange(C)[None, :]
+
+    def scan_fn(x, inp):
+        bp, cl = inp
+        x, new_cl = _block_prefill_chunk_paged(cfg, x, positions, valid,
+                                               block_table, bp, cl)
+        return x, new_cl
+
+    x, new_cache = jax.lax.scan(scan_fn, x, (params["blocks"], cache))
+    x = layers.rms_norm(x, params["final_norm"], cfg.rms_norm_eps)
+    last = jnp.clip(valid - 1, 0, C - 1)
+    x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
+    return unembed(params, cfg, x_last), new_cache
+
+
+def _block_decode_paged(cfg, x, lengths, block_table, bp, cache_layer):
+    h = layers.rms_norm(x, bp["attn_norm"], cfg.rms_norm_eps)
+    a, new_cache = attention.attend_decode_paged(bp["attn"], cfg, h, lengths,
+                                                 block_table, cache_layer)
+    x = x + a
+    h = layers.rms_norm(x, bp["mlp_norm"], cfg.rms_norm_eps)
+    if cfg.moe is not None:
+        out, _ = moe_lib.apply_moe(bp["moe"], cfg, h)
+    else:
+        out = layers.swiglu_mlp(bp["mlp"], h)
+    return x + out, new_cache
+
+
+def decode_step_paged(params, cfg, tokens: jax.Array, lengths: jax.Array,
+                      block_table: jax.Array, cache):
+    """``decode_step`` against the paged KV pool (block_table: (B, nb))."""
+    x = embed_tokens(params, cfg, tokens[:, None])
+
+    def scan_fn(x, inp):
+        bp, cl = inp
+        x, new_cl = _block_decode_paged(cfg, x, lengths, block_table, bp, cl)
+        return x, new_cl
+
+    x, new_cache = jax.lax.scan(scan_fn, x, (params["blocks"], cache))
+    x = layers.rms_norm(x, params["final_norm"], cfg.rms_norm_eps)
+    return unembed(params, cfg, x[:, 0]), new_cache
+
+
 def _block_decode(cfg, x, lengths, bp, cache_layer):
     h = layers.rms_norm(x, bp["attn_norm"], cfg.rms_norm_eps)
     a, new_cache = attention.attend_decode(bp["attn"], cfg, h, lengths, cache_layer)

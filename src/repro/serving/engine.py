@@ -19,12 +19,20 @@ Orca/vLLM:
     eviction LSO — resume skips prefill entirely; mid-prefill evictions
     resume from the last completed chunk),
   * model swapping (flush KV, replace weights; paper's swap LSO),
-  * selectable attention backend (``attention_backend="pallas"`` routes
-    decode through the Pallas kernels — interpret mode on CPU, Mosaic on
-    TPU — so the kernel suite exercises the serving code path).
+  * selectable attention backend: ``"xla"`` / ``"pallas"`` keep the dense
+    per-slot KV arrays (Pallas kernels interpret on CPU, Mosaic on TPU);
+    ``"paged-xla"`` / ``"paged-pallas"`` store KV as a single physical page
+    pool ``(layers, num_blocks, KVH, block_size, D)`` addressed through the
+    ``BlockManager`` block tables — the PagedAttention layout the paper's
+    LSOs assume from their vLLM backend.  Paged mode makes KV capacity
+    ``kv_blocks * block_size`` tokens SHARED across slots (vs
+    ``max_slots * max_seq_len`` dense), eviction snapshots copy only the
+    sequence's pages, and freed pages are physically reused by later
+    admissions.  Token-for-token identical to the dense backends.
 
-All cache pytrees have layout (layers/sites, batch, ...), so slot insert /
-extract are uniform ``tree_map``s over axis 1.
+Dense cache pytrees have layout (layers/sites, batch, ...), so slot insert
+/ extract are uniform ``tree_map``s over axis 1; paged caches have no
+batch axis and are extracted/restored by page id instead.
 """
 from __future__ import annotations
 
@@ -40,7 +48,7 @@ from repro.core.request import Request
 from repro.models.model_factory import Model
 from repro.serving.kv_cache import BlockManager
 
-ATTENTION_BACKENDS = ("xla", "pallas")
+ATTENTION_BACKENDS = ("xla", "pallas", "paged-xla", "paged-pallas")
 
 
 @dataclasses.dataclass
@@ -61,12 +69,23 @@ class EngineConfig:
     # Serving attention backend: None follows the model config's
     # use_pallas_attention flag; "xla" / "pallas" force the jnp or Pallas
     # (flash / blocked-decode, interpret mode off-TPU) paths respectively.
+    # "paged-xla" / "paged-pallas" switch the KV cache to a physically
+    # paged block-table pool (full-attention transformer archs with
+    # chunked prefill only).
     attention_backend: Optional[str] = None
+
+    @property
+    def paged(self) -> bool:
+        return self.attention_backend is not None \
+            and self.attention_backend.startswith("paged")
 
     def resolved_kv_blocks(self) -> int:
         if self.kv_blocks is not None:
             return self.kv_blocks
         return (self.max_slots * self.max_seq_len) // self.block_size
+
+    def max_blocks_per_seq(self) -> int:
+        return -(-self.max_seq_len // self.block_size)
 
     def resolved_buckets(self) -> Tuple[int, ...]:
         if self.prefill_buckets:
@@ -114,10 +133,25 @@ class ContinuousBatchingEngine:
                 f"or None, got {cfg.attention_backend!r}")
         self.cfg = cfg
         self.clock = clock
+        self.paged = cfg.paged
         self.model = self._with_backend(model)
         self.params = params
         self.model_name = model_name
         self.stats = EngineStats()
+        if self.paged:
+            if self.model.init_paged_cache is None:
+                raise ValueError(
+                    f"attention_backend {cfg.attention_backend!r} requires an "
+                    f"arch with pageable KV (got {self.model.cfg.arch_type})")
+            if self.model.cfg.sliding_window is not None:
+                raise ValueError(
+                    "paged attention backends support full attention only "
+                    "(rolling SWA page reuse is a ROADMAP follow-on)")
+            if cfg.prefill_chunk_tokens <= 0:
+                raise ValueError(
+                    "paged attention backends require chunked prefill "
+                    "(prefill_chunk_tokens > 0): the legacy single-shot "
+                    "path writes per-slot dense caches")
 
         self.block_mgr = BlockManager(cfg.resolved_kv_blocks(), cfg.block_size)
         self.slots: List[Optional[Request]] = [None] * cfg.max_slots
@@ -125,8 +159,7 @@ class ContinuousBatchingEngine:
         # prompt tokens already prefilled per slot; a slot is mid-prefill
         # while prefill_pos < prompt_len (decode-ready otherwise)
         self.prefill_pos = np.zeros(cfg.max_slots, np.int32)
-        self.cache = self.model.init_cache(cfg.max_slots, cfg.max_seq_len,
-                                           cfg.dtype)
+        self.cache = self._init_cache()
         self.pull_source: Optional[Callable[[], Optional[Request]]] = None
         self.completed: List[Request] = []
         self._pushback: Optional[Request] = None
@@ -134,9 +167,7 @@ class ContinuousBatchingEngine:
         # the prefill token); drained into the next step()'s return value
         self._admit_completed: List[Request] = []
 
-        self._decode_fn = jax.jit(self._decode_impl)
-        self._chunk_fn = jax.jit(self._prefill_chunk_impl)
-        self._prefill_cache = {}  # per-length jitted single-shot prefill
+        self._jit_compute()
 
     def _with_backend(self, model: Model) -> Model:
         """Route the model's attention through the configured backend
@@ -144,12 +175,29 @@ class ContinuousBatchingEngine:
         backend = self.cfg.attention_backend
         if backend is None:
             return model
-        want = backend == "pallas"
+        want = backend.endswith("pallas")
         if model.cfg.use_pallas_attention != want:
             from repro.models.model_factory import build_model
             return build_model(dataclasses.replace(
                 model.cfg, use_pallas_attention=want))
         return model
+
+    def _init_cache(self):
+        if self.paged:
+            return self.model.init_paged_cache(
+                self.cfg.resolved_kv_blocks(), self.cfg.block_size,
+                self.cfg.dtype)
+        return self.model.init_cache(self.cfg.max_slots, self.cfg.max_seq_len,
+                                     self.cfg.dtype)
+
+    def _jit_compute(self) -> None:
+        if self.paged:
+            self._decode_fn = jax.jit(self._decode_paged_impl)
+            self._chunk_fn = jax.jit(self._prefill_chunk_paged_impl)
+        else:
+            self._decode_fn = jax.jit(self._decode_impl)
+            self._chunk_fn = jax.jit(self._prefill_chunk_impl)
+        self._prefill_cache = {}  # per-length jitted single-shot prefill
 
     # ------------------------------------------------------------------
     # jitted compute
@@ -164,6 +212,36 @@ class ContinuousBatchingEngine:
                                                      starts, valid)
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return tok, new_cache
+
+    def _decode_paged_impl(self, params, cache, tokens, lengths, block_table):
+        logits, new_cache = self.model.decode_step_paged(
+            params, cache, tokens, lengths, block_table)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tokens, new_cache
+
+    def _prefill_chunk_paged_impl(self, params, cache, tokens, starts, valid,
+                                  block_table):
+        logits, new_cache = self.model.prefill_chunk_paged(
+            params, cache, tokens, starts, valid, block_table)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return tok, new_cache
+
+    def _block_table_array(self) -> np.ndarray:
+        """Materialize the BlockManager block tables as one fixed-shape
+        (max_slots, max_blocks_per_seq) int32 array for the jitted paged
+        calls.  Unallocated logical blocks (and empty slots) hold the
+        sentinel ``num_blocks``, which drops writes and is clamped+masked
+        on reads."""
+        sentinel = self.block_mgr.num_blocks
+        bt = np.full((self.cfg.max_slots, self.cfg.max_blocks_per_seq()),
+                     sentinel, np.int32)
+        for i in self.active_slots():
+            r = self.slots[i]
+            if self.block_mgr.has(r.req_id):
+                row = self.block_mgr.block_table(r.req_id)
+                assert len(row) <= bt.shape[1], (len(row), bt.shape)
+                bt[i, :len(row)] = row
+        return bt
 
     def _prefill_one(self, prompt: np.ndarray, extras: Dict[str, Any]):
         """Prefill a single request (batch=1, exact length — SSM-state safe)."""
@@ -202,6 +280,25 @@ class ContinuousBatchingEngine:
             lambda full, snap: full.at[:, b].set(jnp.asarray(snap)),
             self.cache, snapshot)
 
+    def _extract_pages(self, req_id: int):
+        """Paged eviction snapshot: copy ONLY the sequence's pages (axis 1
+        of each (layers, num_blocks, ...) pool leaf) to host memory — the
+        physical reclamation the dense per-slot layout couldn't do."""
+        bt = np.asarray(self.block_mgr.block_table(req_id), np.int32)
+        return jax.tree.map(lambda full: np.asarray(full[:, bt]), self.cache)
+
+    def _restore_pages(self, snapshot, block_ids: List[int]) -> None:
+        """Scatter snapshotted page contents into freshly allocated pages.
+        The allocation may be LARGER than the snapshot (the resume also
+        reserves the next decode step's slot); extra pages are written
+        before they are ever read."""
+        n_snap = jax.tree.leaves(snapshot)[0].shape[1]
+        assert len(block_ids) >= n_snap, (len(block_ids), n_snap)
+        ids = jnp.asarray(np.asarray(block_ids[:n_snap], np.int32))
+        self.cache = jax.tree.map(
+            lambda full, snap: full.at[:, ids].set(jnp.asarray(snap)),
+            self.cache, snapshot)
+
     def active_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slots) if r is not None]
 
@@ -238,7 +335,21 @@ class ContinuousBatchingEngine:
     def can_admit(self, req: Request) -> bool:
         if self._free_slot() is None:
             return False
-        need = req.prompt_len + req.generated + 1
+        if self.paged and req.extras:
+            # modality extras ride the legacy single-shot prefill, which has
+            # no paged variant: refuse (pull loop hands the request back via
+            # pushback) instead of exploding inside admit()
+            return False
+        snap = req.snapshot
+        if snap is not None \
+                and snap.get("prefill_pos", req.prompt_len) >= req.prompt_len:
+            # decode-phase resume: only the snapshotted tokens plus the next
+            # decode step's KV slot are needed (a request evicted at the
+            # max_seq_len boundary must stay re-admittable so it can emit
+            # its final token)
+            need = snap["length"] + 1
+        else:
+            need = req.prompt_len + req.generated + 1
         if need > self.cfg.max_seq_len:
             return False
         # conservative: the WHOLE prompt must be coverable up front — counting
@@ -276,6 +387,19 @@ class ContinuousBatchingEngine:
             return False
         t0 = time.monotonic()
         ex = extras or req.extras or {}
+        my_layout = "paged" if self.paged else "dense"
+        if req.snapshot is not None \
+                and req.snapshot.get("layout", "dense") != my_layout:
+            # snapshot taken under the OTHER KV layout: page contents can't
+            # be transplanted across layouts.  Recompute the prefill when
+            # nothing was generated yet; past that the generated tokens'
+            # KV is unrecoverable.
+            if req.generated == 0:
+                req.snapshot = None
+            else:
+                raise ValueError(
+                    f"cannot resume a {req.snapshot.get('layout', 'dense')} "
+                    f"KV snapshot on a {my_layout} engine mid-decode")
         if req.snapshot is not None \
                 and req.snapshot.get("prefill_pos", req.prompt_len) < req.prompt_len \
                 and not self._use_chunked(ex):
@@ -288,15 +412,24 @@ class ContinuousBatchingEngine:
             # eviction resume: restore KV/state, no prefill recompute.
             # Mid-prefill snapshots resume chunking from the last chunk.
             snap = req.snapshot
-            self._restore_cache(snap["cache"], slot)
-            self.lengths[slot] = snap["length"]
-            self.prefill_pos[slot] = snap.get("prefill_pos", req.prompt_len)
-            req.snapshot = None
-            if self.prefill_pos[slot] >= req.prompt_len:
-                total = req.prompt_len + req.generated
-                self.block_mgr.allocate(req.req_id, total + 1)
+            length = int(snap["length"])
+            ppos = int(snap.get("prefill_pos", req.prompt_len))
+            if ppos >= req.prompt_len:
+                # decode-phase: cover the snapshotted tokens AND the next
+                # decode step's write slot (kv_tokens can be one short when
+                # the eviction was an append_token-failure preemption)
+                kv_tokens = int(snap.get("kv_tokens", length + 1))
+                alloc_tokens = max(kv_tokens, length + 1)
             else:
-                self.block_mgr.allocate(req.req_id, int(self.prefill_pos[slot]))
+                alloc_tokens = int(snap.get("kv_tokens", ppos))
+            blocks = self.block_mgr.allocate(req.req_id, alloc_tokens)
+            if self.paged:
+                self._restore_pages(snap["cache"], blocks)
+            else:
+                self._restore_cache(snap["cache"], slot)
+            self.lengths[slot] = length
+            self.prefill_pos[slot] = ppos
+            req.snapshot = None
             self.stats.resumes += 1
             self.slots[slot] = req
         elif self._use_chunked(ex):
@@ -306,6 +439,14 @@ class ContinuousBatchingEngine:
             self.lengths[slot] = 0
             self.slots[slot] = req
         else:
+            if self.paged:
+                # only reachable by an explicit admit(req, extras={...})
+                # call — pull-source requests with req.extras are refused in
+                # can_admit above
+                raise ValueError(
+                    "paged attention backends have no legacy single-shot "
+                    "prefill path (modality extras and non-chunking archs "
+                    "need a dense backend)")
             # legacy single-shot path (SSM/hybrid/enc-dec state carry, and
             # modality extras that must ride the full-prompt prefill).
             # Compute first — a raising prefill must leave the engine clean.
@@ -345,9 +486,15 @@ class ContinuousBatchingEngine:
         req = self.slots[slot]
         assert req is not None
         req.snapshot = {
-            "cache": self._extract_cache(slot),
+            "cache": (self._extract_pages(req.req_id) if self.paged
+                      else self._extract_cache(slot)),
             "length": int(self.lengths[slot]),
             "prefill_pos": int(self.prefill_pos[slot]),
+            # blocks to re-allocate on resume (paged restore needs the page
+            # count to match; dense resume keeps the same accounting)
+            "kv_tokens": self.block_mgr.seq_tokens(req.req_id)
+            if self.block_mgr.has(req.req_id) else 0,
+            "layout": "paged" if self.paged else "dense",
         }
         req.n_evictions += 1
         self.block_mgr.free(req.req_id)
@@ -380,12 +527,13 @@ class ContinuousBatchingEngine:
         self.model = self._with_backend(model)
         self.params = params
         self.model_name = model_name
-        self.cache = self.model.init_cache(self.cfg.max_slots,
-                                           self.cfg.max_seq_len, self.cfg.dtype)
+        if self.paged and self.model.init_paged_cache is None:
+            raise ValueError(
+                f"cannot swap a {self.model.cfg.arch_type} model into a "
+                "paged-backend engine (no pageable KV)")
+        self.cache = self._init_cache()
         self.block_mgr.reset()
-        self._decode_fn = jax.jit(self._decode_impl)
-        self._chunk_fn = jax.jit(self._prefill_chunk_impl)
-        self._prefill_cache.clear()
+        self._jit_compute()
         self.stats.model_swaps += 1
         self.stats.swap_time += time.monotonic() - t0
         return evicted
@@ -407,8 +555,13 @@ class ContinuousBatchingEngine:
                         done: List[Request]) -> bool:
         req = self.slots[slot]
         eos = (self.cfg.eos_token is not None and tok == self.cfg.eos_token)
+        # capacity finish fires at max_seq_len, NOT max_seq_len - 1: a slot
+        # at lengths == max_seq_len - 1 still has one legal decode step
+        # (its write lands at cache slot max_seq_len - 1) whose token must
+        # be emitted before the slot retires — the final token itself
+        # needs no KV slot because nothing attends after it.
         if eos or req.generated >= req.max_new_tokens \
-                or self.lengths[slot] >= self.cfg.max_seq_len - 1:
+                or self.lengths[slot] >= self.cfg.max_seq_len:
             req.completion_time = now
             done.append(req)
             self.block_mgr.free(req.req_id)
@@ -454,9 +607,17 @@ class ContinuousBatchingEngine:
             tokens[i, :n] = chunk
             starts[i] = self.prefill_pos[i]
             valid[i] = n
-        toks_out, self.cache = self._chunk_fn(
-            self.params, self.cache, jnp.asarray(tokens),
-            jnp.asarray(starts), jnp.asarray(valid))
+        if self.paged:
+            # table built AFTER the extends above so it names this chunk's
+            # freshly allocated pages
+            toks_out, self.cache = self._chunk_fn(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(starts), jnp.asarray(valid),
+                jnp.asarray(self._block_table_array()))
+        else:
+            toks_out, self.cache = self._chunk_fn(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(starts), jnp.asarray(valid))
         toks_out = np.asarray(toks_out)
         self.stats.prefill_chunks += 1
         now = self.clock()
@@ -483,8 +644,15 @@ class ContinuousBatchingEngine:
         for i in active:
             tokens[i] = self.slots[i].output_tokens[-1] if self.slots[i].output_tokens \
                 else self.slots[i].prompt_tokens[-1]
-        next_tokens, self.cache = self._decode_fn(
-            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(self.lengths))
+        if self.paged:
+            next_tokens, self.cache = self._decode_fn(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(self.lengths),
+                jnp.asarray(self._block_table_array()))
+        else:
+            next_tokens, self.cache = self._decode_fn(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(self.lengths))
         next_tokens = np.asarray(next_tokens)
         self.stats.decode_iterations += 1
         self.stats.decode_time += time.monotonic() - t0
@@ -492,12 +660,9 @@ class ContinuousBatchingEngine:
         now = self.clock()
         for i in active:
             req = self.slots[i]
-            # block accounting; preempt on OOM (vLLM-style)
-            if not self.block_mgr.append_token(req.req_id):
-                self.stats.preemptions += 1
-                self.evict_slot(i)
-                req._in_flight = False
-                continue
+            # record the token FIRST: the decode step that produced it has
+            # already written its KV (at slot lengths), so neither a finish
+            # nor an OOM preemption below may drop it.
             self.lengths[i] += 1
             tok = int(next_tokens[i])
             req.output_tokens.append(tok)
@@ -505,7 +670,15 @@ class ContinuousBatchingEngine:
             self.stats.tokens_generated += 1
             if req.first_token_time is None:
                 req.first_token_time = now
-            self._finish_if_done(i, tok, now, done)
+            if self._finish_if_done(i, tok, now, done):
+                continue
+            # reserve the NEXT decode step's KV slot; preempt on OOM
+            # (vLLM-style) — the just-produced token rides along in the
+            # eviction snapshot instead of being recomputed on resume.
+            if not self.block_mgr.append_token(req.req_id):
+                self.stats.preemptions += 1
+                self.evict_slot(i)
+                req._in_flight = False
 
     def step(self) -> List[Request]:
         """Admit from the pull source, run one prefill chunk round, then one

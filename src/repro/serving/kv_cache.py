@@ -1,11 +1,16 @@
 """Paged KV-cache block manager (PagedAttention-style accounting).
 
-On TPU the KV pages are dense HBM arrays indexed by block tables; this
-manager owns the **allocation state machine** the iteration scheduler uses
-for admission / preemption decisions: a free list of fixed-size blocks, a
-per-sequence block table, and token-capacity queries.  The paper's RWT
-estimator consumes ``GPU`` (total token capacity) from here (Appendix A.1,
-Eq. 16).
+This manager owns the **allocation state machine** the iteration scheduler
+uses for admission / preemption decisions: a free list of fixed-size
+blocks, a per-sequence block table, and token-capacity queries.  The
+paper's RWT estimator consumes ``GPU`` (total token capacity) from here
+(Appendix A.1, Eq. 16).
+
+Under the dense attention backends the block ids are pure bookkeeping (the
+KV lives in per-slot ``(B, KVH, S, D)`` arrays); under the paged backends
+(``attention_backend="paged-*"``) each id names a PHYSICAL page of the
+global pool ``(num_blocks, KVH, block_size, D)`` — freeing a sequence
+makes its HBM immediately reusable by any other sequence.
 """
 from __future__ import annotations
 
@@ -62,13 +67,26 @@ class BlockManager:
         return need <= len(self._free) - reserve - reserve_blocks
 
     # ------------------------------------------------------------------
-    def allocate(self, seq_id: int, num_tokens: int) -> List[int]:
+    def allocate(self, seq_id: int, num_tokens: int, *,
+                 respect_watermark: bool = True) -> List[int]:
+        """Allocate a fresh sequence's blocks.
+
+        ``respect_watermark`` defaults to True so an admission-time
+        ``can_allocate`` check and the allocation it green-lights enforce
+        the SAME bound — previously ``allocate`` ignored the watermark and
+        could silently eat the reserve ``can_allocate`` had just refused to
+        touch.  Pass False only for allocations that are allowed to dip
+        into the reserve (mirroring ``extend`` / ``append_token``, which
+        never apply it to in-flight sequences).
+        """
         if seq_id in self._seqs:
             raise KeyError(f"seq {seq_id} already allocated")
         need = self.blocks_needed(num_tokens)
-        if need > len(self._free):
+        reserve = self.watermark_blocks if respect_watermark else 0
+        if need > len(self._free) - reserve:
             raise OutOfBlocksError(
-                f"need {need} blocks, {len(self._free)} free")
+                f"need {need} blocks, {len(self._free)} free"
+                + (f" ({reserve} reserved by watermark)" if reserve else ""))
         blocks = [self._free.pop() for _ in range(need)]
         self._seqs[seq_id] = SeqAlloc(block_table=blocks, num_tokens=num_tokens)
         return blocks

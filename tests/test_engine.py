@@ -104,6 +104,57 @@ def test_oom_preemption(small_model):
     assert eng.stats.preemptions >= 1 or not admitted2
 
 
+def test_max_seq_len_emits_final_token(small_model):
+    """The capacity finish must not fire a step early: a slot at
+    lengths == max_seq_len - 1 has one legal decode step left (its KV write
+    lands in the last cache slot) and that step's token must be emitted.
+    Total generated tokens == max_seq_len - prompt_len + 1 (the prefill
+    token + one per decode step + the final token that needs no KV slot)."""
+    _, model, params = small_model
+    M, P = 16, 5
+    for chunk in (0, 8):   # legacy and chunked prefill paths agree
+        eng = _mk_engine(model, params, max_seq_len=M,
+                         prefill_chunk_tokens=chunk)
+        r = _req(list(range(P)), n=100)      # max_new never binds
+        assert eng.admit(r)
+        for _ in range(2 * M):
+            if r.finished():
+                break
+            eng.step()
+        assert r.finished()
+        assert len(r.output_tokens) == r.generated == M - P + 1
+        assert eng.block_mgr.used_blocks == 0 and eng.num_active() == 0
+
+
+def test_preemption_keeps_just_produced_token(small_model):
+    """An append_token-failure preemption snapshots AFTER recording the
+    decode step's token: output_tokens/generated/length stay consistent and
+    the resumed request completes with the deterministic token stream."""
+    _, model, params = small_model
+    prompt = [1, 2, 3]
+    base = _mk_engine(model, params)
+    r_base = _req(prompt, n=12)
+    assert base.admit(r_base)
+    while not r_base.finished():
+        base.step()
+
+    eng = _mk_engine(model, params, kv_blocks=3, block_size=4, max_slots=1)
+    r = _req(prompt, n=12)                   # 12 tokens of KV: must preempt
+    assert eng.admit(r)
+    for _ in range(15):
+        eng.step()
+        if eng.stats.preemptions:
+            break
+    assert eng.stats.preemptions == 1 and r.snapshot is not None
+    assert len(r.output_tokens) == r.generated > 0
+    # the token produced by the decode step that hit the OOM is in BOTH the
+    # output stream and the snapshot's length accounting
+    assert r.snapshot["length"] == r.prompt_len + r.generated - 1
+    # drain capacity is permanently short for this request; verify the
+    # kept prefix matches the uninterrupted run instead of resuming
+    assert r.output_tokens == r_base.output_tokens[:len(r.output_tokens)]
+
+
 def test_ttft_and_completion_recorded(small_model):
     _, model, params = small_model
     eng = _mk_engine(model, params)

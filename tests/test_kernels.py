@@ -77,6 +77,120 @@ def test_decode_attention_respects_lengths():
     np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)
 
 
+def _paged_from_dense(k_dense, v_dense, block_size, num_pool_blocks, rng):
+    """Scatter dense (B, KVH, S, D) k/v into a page pool through a random
+    (non-contiguous) page assignment; returns (k_pages, v_pages, block_table)."""
+    B, KVH, S, D = k_dense.shape
+    nb = S // block_size
+    assert nb * block_size == S
+    perm = rng.permutation(num_pool_blocks)[:B * nb].reshape(B, nb)
+    k_pages = rng.standard_normal((num_pool_blocks, KVH, block_size, D)) \
+        .astype(k_dense.dtype)  # unowned pages hold garbage on purpose
+    v_pages = rng.standard_normal((num_pool_blocks, KVH, block_size, D)) \
+        .astype(v_dense.dtype)
+    for b in range(B):
+        for i in range(nb):
+            k_pages[perm[b, i]] = k_dense[b, :, i * block_size:(i + 1) * block_size]
+            v_pages[perm[b, i]] = v_dense[b, :, i * block_size:(i + 1) * block_size]
+    return k_pages, v_pages, perm.astype(np.int32)
+
+
+@pytest.mark.parametrize("B,H,KVH,S,D,bs", [
+    (2, 8, 2, 64, 32, 16),
+    (3, 4, 4, 40, 16, 8),
+    (1, 6, 1, 24, 64, 4),
+])
+def test_paged_decode_attention(B, H, KVH, S, D, bs):
+    """Block-table kernel == dense oracle through a permuted page pool."""
+    rng = np.random.default_rng(10)
+    q = rng.standard_normal((B, H, D)).astype(np.float32)
+    k = rng.standard_normal((B, KVH, S, D)).astype(np.float32)
+    v = rng.standard_normal((B, KVH, S, D)).astype(np.float32)
+    kp, vp, bt = _paged_from_dense(k, v, bs, 4 * B * (S // bs), rng)
+    lengths = rng.integers(1, S + 1, size=B).astype(np.int32)
+    out = ops.paged_decode_attention(q, kp, vp, bt, lengths)
+    want = ref.decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-5, atol=2e-5)
+    # and the XLA gather reference agrees with both
+    want2 = ref.paged_decode_attention_ref(q, kp, vp, bt, lengths)
+    np.testing.assert_allclose(np.asarray(want2, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_decode_attention_sentinel_blocks_ignored():
+    """Logical blocks past `lengths` may hold sentinel (out-of-pool) page
+    ids — required by the engine, whose tables are sentinel-padded."""
+    rng = np.random.default_rng(11)
+    B, H, KVH, S, D, bs = 2, 4, 2, 32, 16, 8
+    q = rng.standard_normal((B, H, D)).astype(np.float32)
+    k = rng.standard_normal((B, KVH, S, D)).astype(np.float32)
+    v = rng.standard_normal((B, KVH, S, D)).astype(np.float32)
+    kp, vp, bt = _paged_from_dense(k, v, bs, 16, rng)
+    lengths = np.array([7, 9], np.int32)   # needs 1 / 2 pages only
+    out1 = ops.paged_decode_attention(q, kp, vp, bt, lengths)
+    bt_sent = bt.copy()
+    bt_sent[0, 1:] = 16   # sentinel = pool size
+    bt_sent[1, 2:] = 16
+    out2 = ops.paged_decode_attention(q, kp, vp, bt_sent, lengths)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)
+    want = ref.decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_decode_attention_quant():
+    """int8 page pool with per-row scale pages == dequantized oracle."""
+    rng = np.random.default_rng(12)
+    B, H, KVH, S, D, bs = 2, 8, 2, 48, 32, 8
+    nb, N = S // bs, 24
+    q = rng.standard_normal((B, H, D)).astype(np.float32)
+    kq = rng.integers(-127, 128, size=(N, KVH, bs, D)).astype(np.int8)
+    vq = rng.integers(-127, 128, size=(N, KVH, bs, D)).astype(np.int8)
+    ks = (rng.random((N, KVH, bs)) * 0.1).astype(np.float32)
+    vs = (rng.random((N, KVH, bs)) * 0.1).astype(np.float32)
+    bt = rng.permutation(N)[:B * nb].reshape(B, nb).astype(np.int32)
+    lengths = np.array([S, 13], np.int32)
+    out = ops.paged_decode_attention_quant(q, kq, vq, ks, vs, bt, lengths)
+    from repro.kernels.paged_decode_attention import gather_kv_pages
+    k = np.asarray(gather_kv_pages(jnp.asarray(kq), jnp.asarray(bt)), np.float32) \
+        * np.asarray(gather_kv_pages(jnp.asarray(ks), jnp.asarray(bt)))[..., None]
+    v = np.asarray(gather_kv_pages(jnp.asarray(vq), jnp.asarray(bt)), np.float32) \
+        * np.asarray(gather_kv_pages(jnp.asarray(vs), jnp.asarray(bt)))[..., None]
+    want = ref.decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("length", [1, 20, 64])  # incl. the full-cache boundary
+def test_decode_attention_quant_length_convention(length):
+    """The quant and float decode kernels must consume the SAME (inclusive)
+    `lengths` convention: identical int8 content run through the fused
+    kernel and through dequantize->float kernel must agree for every
+    length, including lengths == S where an off-by-one would read (or drop)
+    the final slot."""
+    rng = np.random.default_rng(13)
+    B, H, KVH, S, D = 2, 4, 2, 64, 16
+    q = rng.standard_normal((B, H, D)).astype(np.float32)
+    kq = rng.integers(-127, 128, size=(B, KVH, S, D)).astype(np.int8)
+    vq = rng.integers(-127, 128, size=(B, KVH, S, D)).astype(np.int8)
+    ks = (rng.random((B, KVH, S)) * 0.1).astype(np.float32)
+    vs = (rng.random((B, KVH, S)) * 0.1).astype(np.float32)
+    lengths = np.array([length, max(1, length - 1)], np.int32)
+    from repro.kernels.decode_attention import decode_attention_quant
+    out_q = decode_attention_quant(jnp.asarray(q), jnp.asarray(kq),
+                                   jnp.asarray(vq), jnp.asarray(ks),
+                                   jnp.asarray(vs), jnp.asarray(lengths),
+                                   interpret=True)
+    k = kq.astype(np.float32) * ks[..., None]
+    v = vq.astype(np.float32) * vs[..., None]
+    out_f = ops.decode_attention(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out_q), np.asarray(out_f),
+                               rtol=2e-4, atol=2e-4)
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32])
 @pytest.mark.parametrize("B,L,H,P,G,N,chunk", [
     (1, 64, 2, 16, 1, 8, 16),

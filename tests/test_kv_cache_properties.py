@@ -1,0 +1,62 @@
+"""BlockManager property tests: random allocate/extend/append_token/free
+interleavings never double-assign a block and always conserve
+``free_blocks + used_blocks == num_blocks`` (the invariants the paged KV
+pool's physical page reuse depends on)."""
+import pytest
+pytest.importorskip("hypothesis")  # optional dep: property tests only
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.kv_cache import BlockManager
+
+
+def _check_invariants(bm: BlockManager) -> None:
+    assert bm.free_blocks + bm.used_blocks == bm.num_blocks
+    for s in list(bm._seqs):
+        alloc = bm._seqs[s]
+        # table length tracks blocks_needed exactly (append_token reserves
+        # the next block right when num_tokens crosses a boundary)
+        assert len(alloc.block_table) == bm.blocks_needed(alloc.num_tokens) \
+            or alloc.num_tokens % bm.block_size == 0
+        assert alloc.num_tokens <= len(alloc.block_table) * bm.block_size
+    # no block is double-owned, none both owned and free
+    owned = [b for s in bm._seqs.values() for b in s.block_table]
+    assert len(owned) == len(set(owned))
+    assert not (set(owned) & set(bm._free))
+    assert all(0 <= b < bm.num_blocks for b in owned)
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "extend", "append", "free"]),
+                          st.integers(0, 7), st.integers(1, 40)),
+                max_size=80))
+def test_accounting_invariants(ops):
+    bm = BlockManager(num_blocks=16, block_size=4)
+    for op, sid, ntok in ops:
+        if op == "alloc" and not bm.has(sid):
+            if bm.can_allocate(ntok):
+                bm.allocate(sid, ntok)   # same bound: must never raise
+        elif op == "extend" and bm.has(sid):
+            before = bm.seq_tokens(sid)
+            if not bm.extend(sid, ntok):
+                assert bm.seq_tokens(sid) == before  # refusal mutates nothing
+        elif op == "append" and bm.has(sid):
+            bm.append_token(sid)
+        elif op == "free":
+            bm.free(sid)
+        _check_invariants(bm)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(1, 64), min_size=1, max_size=10),
+       st.integers(1, 8))
+def test_free_restores_full_capacity(token_counts, block_size):
+    bm = BlockManager(num_blocks=64, block_size=block_size)
+    admitted = []
+    for sid, n in enumerate(token_counts):
+        if bm.can_allocate(n):
+            bm.allocate(sid, n)
+            admitted.append(sid)
+        _check_invariants(bm)
+    for sid in admitted:
+        bm.free(sid)
+    assert bm.free_blocks == bm.num_blocks and bm.tokens_allocated() == 0

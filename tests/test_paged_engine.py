@@ -1,0 +1,260 @@
+"""Paged (block-table) attention backends in the real engine.
+
+The acceptance bar for the paged KV pool: for mixed prompt lengths with
+mid-stream eviction / resume, ``paged-pallas`` (interpret mode on CPU) and
+the dense ``xla`` backend produce IDENTICAL tokens, engine KV capacity
+follows ``kv_blocks * block_size`` independent of
+``max_slots * max_seq_len``, and freed pages are physically reused.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHITECTURES
+from repro.core.request import Request
+from repro.models import build_model
+from repro.serving import ContinuousBatchingEngine, EngineConfig
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = ARCHITECTURES["granite-3-2b"].reduced(num_layers=2, d_model=128)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _mk_engine(model, params, **kw):
+    cfg = EngineConfig(**{"max_slots": 4, "max_seq_len": 64,
+                          "prefill_chunk_tokens": 16, "block_size": 8, **kw})
+    return ContinuousBatchingEngine(model, params, cfg, model_name="m1")
+
+
+def _req(prompt, n=8):
+    return Request(prompt_tokens=list(prompt), model="m1", slo=1e9,
+                   max_new_tokens=n)
+
+
+def _run_to_completion(eng, reqs, max_steps=200):
+    for _ in range(max_steps):
+        eng.step()
+        if all(r.finished() for r in reqs):
+            return
+    raise AssertionError("requests did not finish")
+
+
+# ---------------------------------------------------------------------------
+# token parity (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def _serve_with_evict_resume(model, params, backend, prompts, n=6):
+    """Admit mixed-length prompts, evict one request mid-stream, resume it,
+    and drain; returns each request's output tokens."""
+    eng = _mk_engine(model, params, attention_backend=backend)
+    reqs = [_req(p, n=n) for p in prompts]
+    for r in reqs:
+        assert eng.admit(r)
+    eng.step()
+    eng.step()                                     # r1 is mid-stream now
+    ev = eng.evict_request(reqs[1].req_id)
+    assert ev is reqs[1] and reqs[1].snapshot is not None
+    eng.step()                                     # others advance meanwhile
+    assert eng.admit(reqs[1])                      # snapshot resume
+    assert eng.stats.resumes == 1
+    _run_to_completion(eng, reqs)
+    assert eng.block_mgr.used_blocks == 0
+    return [r.output_tokens for r in reqs]
+
+
+def test_paged_backends_match_dense_tokens_with_eviction(small_model):
+    _, model, params = small_model
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 100, size=n).tolist() for n in (3, 17, 30, 9)]
+    want = _serve_with_evict_resume(model, params, "xla", prompts)
+    assert all(len(t) == 6 for t in want)
+    for backend in ("paged-xla", "paged-pallas"):
+        got = _serve_with_evict_resume(model, params, backend, prompts)
+        assert got == want, backend
+
+
+def test_paged_quant_matches_dense_quant_tokens(small_model):
+    """int8 page pool (scale pages + fused-dequant paged kernel) matches the
+    dense int8 cache token-for-token."""
+    cfg = dataclasses.replace(
+        ARCHITECTURES["granite-3-2b"].reduced(num_layers=1, d_model=64),
+        kv_quant=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, 100, size=n).tolist() for n in (5, 21)]
+    outs = {}
+    for backend in ("xla", "paged-xla", "paged-pallas"):
+        eng = _mk_engine(model, params, attention_backend=backend, max_slots=2)
+        reqs = [_req(p, n=5) for p in prompts]
+        for r in reqs:
+            assert eng.admit(r)
+        _run_to_completion(eng, reqs)
+        outs[backend] = [r.output_tokens for r in reqs]
+    assert outs["paged-xla"] == outs["xla"]
+    assert outs["paged-pallas"] == outs["xla"]
+
+
+# ---------------------------------------------------------------------------
+# capacity decoupling + physical page reuse
+# ---------------------------------------------------------------------------
+
+def test_paged_capacity_tracks_blocks_not_slots(small_model):
+    """Dense cache bytes scale with max_slots * max_seq_len; the page pool's
+    scale with kv_blocks * block_size only."""
+    _, model, params = small_model
+
+    def cache_bytes(eng):
+        return sum(leaf.nbytes for leaf in jax.tree.leaves(eng.cache))
+
+    dense_small = _mk_engine(model, params, max_slots=2, max_seq_len=64)
+    dense_big = _mk_engine(model, params, max_slots=8, max_seq_len=256)
+    assert cache_bytes(dense_big) == 16 * cache_bytes(dense_small)
+
+    paged_small = _mk_engine(model, params, max_slots=2, max_seq_len=64,
+                             kv_blocks=16, attention_backend="paged-xla")
+    paged_big = _mk_engine(model, params, max_slots=8, max_seq_len=256,
+                           kv_blocks=16, attention_backend="paged-xla")
+    assert cache_bytes(paged_big) == cache_bytes(paged_small)
+    assert paged_big.block_mgr.token_capacity == 16 * 8  # kv_blocks * block_size
+
+    # an 8-slot/256-seq engine with a 4x-oversubscribed pool still serves
+    rng = np.random.default_rng(2)
+    reqs = [_req(rng.integers(0, 100, size=6).tolist(), n=3) for _ in range(3)]
+    for r in reqs:
+        assert paged_big.admit(r)
+    _run_to_completion(paged_big, reqs)
+    assert paged_big.block_mgr.used_blocks == 0
+
+
+def test_freed_pages_are_physically_reused(small_model):
+    """Evict A -> admit B (B overwrites A's freed pages) -> finish B ->
+    resume A: A must still produce the uninterrupted run's tokens, because
+    its eviction snapshot copied the page CONTENTS, not just the table."""
+    _, model, params = small_model
+    rng = np.random.default_rng(3)
+    prompt_a = rng.integers(0, 100, size=20).tolist()
+    prompt_b = rng.integers(0, 100, size=20).tolist()
+
+    base = _mk_engine(model, params, attention_backend="paged-pallas",
+                      kv_blocks=8, max_slots=1)
+    r_base = _req(prompt_a, n=8)
+    assert base.admit(r_base)
+    _run_to_completion(base, [r_base])
+
+    eng = _mk_engine(model, params, attention_backend="paged-pallas",
+                     kv_blocks=8, max_slots=1)  # pool barely fits ONE request
+    r_a = _req(prompt_a, n=8)
+    assert eng.admit(r_a)
+    for _ in range(4):
+        eng.step()
+    pages_a = set(eng.block_mgr.block_table(r_a.req_id))
+    eng.evict_request(r_a.req_id)
+
+    r_b = _req(prompt_b, n=8)
+    assert eng.admit(r_b)
+    eng.step()
+    eng.step()
+    # with an 8-block pool (A held >= 3 of them), B's allocation MUST have
+    # recycled pages A physically occupied a moment ago
+    pages_b = set(eng.block_mgr.block_table(r_b.req_id))
+    assert pages_a & pages_b, (pages_a, pages_b)
+    _run_to_completion(eng, [r_b])
+    assert eng.stats.evictions == 1
+
+    assert eng.admit(r_a)                        # resume over recycled pages
+    pages_a2 = set(eng.block_mgr.block_table(r_a.req_id))
+    assert pages_a2 & pages_b                    # ...recycled again
+    _run_to_completion(eng, [r_a])
+    assert r_a.output_tokens == r_base.output_tokens
+
+
+def test_paged_eviction_snapshot_is_page_granular(small_model):
+    """The snapshot copies exactly the sequence's pages (n_pages on axis 1),
+    not a max_seq_len stripe."""
+    _, model, params = small_model
+    eng = _mk_engine(model, params, attention_backend="paged-xla")
+    r = _req(list(range(20)), n=8)
+    assert eng.admit(r)
+    eng.step()
+    eng.step()
+    n_pages = len(eng.block_mgr.block_table(r.req_id))
+    eng.evict_request(r.req_id)
+    leaf = jax.tree.leaves(r.snapshot["cache"])[0]
+    assert leaf.shape[1] == n_pages
+    assert r.snapshot["layout"] == "paged"
+    assert r.snapshot["kv_tokens"] > 0
+
+
+# ---------------------------------------------------------------------------
+# configuration gating
+# ---------------------------------------------------------------------------
+
+def test_paged_backend_rejects_unsupported_configs(small_model):
+    _, model, params = small_model
+    swa_model = build_model(
+        ARCHITECTURES["h2o-danube-1.8b"].reduced(num_layers=1, d_model=64))
+    ssm_model = build_model(
+        ARCHITECTURES["mamba2-130m"].reduced(num_layers=1, d_model=64))
+    with pytest.raises(ValueError):   # rolling SWA cache can't page (yet)
+        _mk_engine(swa_model, swa_model.init(jax.random.key(0)),
+                   attention_backend="paged-xla")
+    with pytest.raises(ValueError):   # SSM state has no pageable KV
+        _mk_engine(ssm_model, ssm_model.init(jax.random.key(0)),
+                   attention_backend="paged-xla")
+    with pytest.raises(ValueError):   # paged requires chunked prefill
+        _mk_engine(model, params, attention_backend="paged-pallas",
+                   prefill_chunk_tokens=0)
+    with pytest.raises(ValueError):   # still validates unknown names
+        _mk_engine(model, params, attention_backend="paged-cuda")
+
+
+def test_paged_refuses_extras_requests_gracefully(small_model):
+    """A request carrying modality extras needs the legacy single-shot
+    prefill (no paged variant): can_admit refuses it so a pull loop hands
+    it back via pushback instead of step() exploding mid-serve."""
+    _, model, params = small_model
+    eng = _mk_engine(model, params, attention_backend="paged-xla")
+    r = _req([1, 2, 3], n=4)
+    r.extras = {"patch_embeds": np.zeros((2, 4), np.float32)}
+    assert not eng.can_admit(r)
+    assert not eng.admit(r)
+    queue = [r]
+    eng.pull_source = lambda: queue.pop(0) if queue else None
+    eng.step()                                   # must not raise
+    assert eng.take_pushback() is r
+    with pytest.raises(ValueError):              # explicit call still loud
+        eng.admit(_req([1, 2], n=2), extras={"patch_embeds": np.zeros((2, 4))})
+
+
+def test_cross_layout_snapshot_falls_back_or_raises(small_model):
+    """A mid-prefill dense snapshot re-admitted to a paged engine recomputes
+    (page contents can't be transplanted); a mid-decode one raises."""
+    _, model, params = small_model
+    dense_eng = _mk_engine(model, params)
+    r = _req(list(range(24)), n=6)
+    assert dense_eng.admit(r)
+    dense_eng.step()                              # one chunk done
+    dense_eng.evict_request(r.req_id)
+    assert r.snapshot["layout"] == "dense" and r.generated == 0
+
+    paged_eng = _mk_engine(model, params, attention_backend="paged-xla")
+    assert paged_eng.admit(r)                     # falls back to fresh prefill
+    assert paged_eng.stats.resumes == 0
+    _run_to_completion(paged_eng, [r])
+    assert len(r.output_tokens) == 6
+
+    r2 = _req(list(range(5)), n=6)
+    assert dense_eng.admit(r2)
+    dense_eng.step()
+    dense_eng.step()
+    assert r2.generated > 0
+    dense_eng.evict_request(r2.req_id)
+    with pytest.raises(ValueError):
+        _mk_engine(model, params, attention_backend="paged-xla").admit(r2)
