@@ -106,10 +106,16 @@ class ModelConfig:
     # dequantizes in VMEM, the XLA fallback dequantizes at use.
     kv_quant: bool = False
     # route attention through the Pallas kernels (flash prefill/train,
-    # blocked decode incl. the fused-dequant int8 variant).  Default off:
-    # on CPU they execute interpret=True (correct but slow); on TPU they
-    # compile via Mosaic.
+    # blocked decode incl. the fused-dequant int8 variant, paged decode /
+    # prefill-chunk block-table kernels).  Default off: on CPU they execute
+    # interpret=True (correct but slow); on TPU they compile via Mosaic.
     use_pallas_attention: bool = False
+    # KV pages fetched per grid step by the paged Pallas kernels (decode
+    # AND prefill-chunk): multi-page tiles keep MXU tiles full when
+    # block_size is small.  None auto-derives from block_size
+    # (kernels.paged_decode_attention.auto_pages_per_tile targets 128-row
+    # tiles); engines expose it via EngineConfig.pages_per_tile.
+    paged_pages_per_tile: Optional[int] = None
     # citation / provenance
     source: str = ""
 

@@ -36,10 +36,10 @@ class PolicyTraits:
     # the real engine's EngineConfig.prefill_chunk_tokens: prefill cost is
     # spread over iterations that keep decoding, instead of one lump
     # iteration per admission round.  None => legacy lump accounting.
-    # Known abstraction gap: the engine additionally clamps its quantum to a
-    # model's sliding window (engine._chunk_quantum); the sim models one
-    # quantum per policy, so SWA models with chunk > window are approximated
-    # (see ROADMAP open items).
+    # The engine additionally clamps its quantum to a model's sliding
+    # window (engine._chunk_quantum); HardwareProfile.sliding_window
+    # carries the window per (model, device) so the simulator and RWT
+    # charge the SAME per-model chunk counts (hw.chunk_quantum()).
     prefill_chunk_tokens: Optional[int] = None
 
 

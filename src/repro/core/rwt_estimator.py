@@ -59,6 +59,28 @@ class HardwareProfile:
     # ceil(I / chunk) iterations that each also run a decode step, so the
     # prefill term of C_q grows by that interleaving overhead.
     prefill_chunk_tokens: Optional[int] = None
+    # Sliding-window width of the model served on this profile (None = full
+    # attention).  The real engine clamps its chunk quantum to the window
+    # (engine._chunk_quantum: a single chunk must never write the same
+    # rolling cache slot twice); carrying the window here lets the
+    # simulator and the RWT prefill term charge the SAME per-model chunk
+    # counts instead of one approximate quantum per policy.
+    sliding_window: Optional[int] = None
+
+    def chunk_quantum(self, quantum: Optional[int] = None) -> Optional[int]:
+        """Effective per-model chunked-prefill quantum (mirrors the
+        engine's sliding-window clamp); None = lump prefill.
+
+        ``quantum`` overrides ``self.prefill_chunk_tokens`` as the
+        unclamped quantum (the simulator passes the policy's value so the
+        clamp lives in ONE place).  ``sliding_window`` is expected to be
+        pre-capped at the engine's max_seq_len by its producer
+        (``calibrate_from_engine`` does this).
+        """
+        c = quantum if quantum is not None else self.prefill_chunk_tokens
+        if c and self.sliding_window is not None:
+            return min(c, self.sliding_window)
+        return c
 
     def prefill_seconds(self, prompt_tokens: Optional[float] = None) -> float:
         """Prefill term P for one request.
@@ -66,14 +88,14 @@ class HardwareProfile:
         Without ``prompt_tokens`` this is the paper's constant P.  With it,
         P scales per-1k-prompt-tokens (matching the simulator's accounting)
         and, when the instance prefills in chunks, adds one interleaved
-        decode iteration per chunk.
+        decode iteration per chunk (window-clamped via ``chunk_quantum``).
         """
         if prompt_tokens is None:
             return self.prefill_time
         t = self.prefill_time * (prompt_tokens / 1024.0)
-        if self.prefill_chunk_tokens:
-            n_chunks = math.ceil(max(prompt_tokens, 1.0)
-                                 / self.prefill_chunk_tokens)
+        chunk = self.chunk_quantum()
+        if chunk:
+            n_chunks = math.ceil(max(prompt_tokens, 1.0) / chunk)
             t += n_chunks * self.decode_per_token
         return t
 

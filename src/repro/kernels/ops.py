@@ -17,6 +17,10 @@ from repro.kernels.paged_decode_attention import (
     paged_decode_attention as _paged_decode_attention,
     paged_decode_attention_quant as _paged_decode_attention_quant,
 )
+from repro.kernels.paged_prefill_attention import (
+    paged_prefill_attention as _paged_prefill_attention,
+    paged_prefill_attention_quant as _paged_prefill_attention_quant,
+)
 from repro.kernels.ssd_scan import ssd_scan as _ssd_scan
 
 
@@ -41,22 +45,52 @@ def decode_attention(q, k, v, lengths, *, block_k: int = 256,
     return _decode_attention(q, k, v, lengths, block_k=block_k, interpret=interp)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("pages_per_tile", "interpret"))
 def paged_decode_attention(q, k_pages, v_pages, block_table, lengths, *,
+                           pages_per_tile: int | None = None,
                            interpret: bool | None = None):
     interp = _default_interpret() if interpret is None else interpret
     return _paged_decode_attention(q, k_pages, v_pages, block_table, lengths,
+                                   pages_per_tile=pages_per_tile,
                                    interpret=interp)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("pages_per_tile", "interpret"))
 def paged_decode_attention_quant(q, k_pages, v_pages, k_scale_pages,
                                  v_scale_pages, block_table, lengths, *,
+                                 pages_per_tile: int | None = None,
                                  interpret: bool | None = None):
     interp = _default_interpret() if interpret is None else interpret
     return _paged_decode_attention_quant(q, k_pages, v_pages, k_scale_pages,
                                          v_scale_pages, block_table, lengths,
+                                         pages_per_tile=pages_per_tile,
                                          interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("pages_per_tile", "interpret"))
+def paged_prefill_attention(q, k_pages, v_pages, chunk_k, chunk_v,
+                            block_table, starts, valid, *,
+                            pages_per_tile: int | None = None,
+                            interpret: bool | None = None):
+    interp = _default_interpret() if interpret is None else interpret
+    return _paged_prefill_attention(q, k_pages, v_pages, chunk_k, chunk_v,
+                                    block_table, starts, valid,
+                                    pages_per_tile=pages_per_tile,
+                                    interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("pages_per_tile", "interpret"))
+def paged_prefill_attention_quant(q, k_pages, v_pages, k_scale_pages,
+                                  v_scale_pages, chunk_k, chunk_v,
+                                  block_table, starts, valid, *,
+                                  pages_per_tile: int | None = None,
+                                  interpret: bool | None = None):
+    interp = _default_interpret() if interpret is None else interpret
+    return _paged_prefill_attention_quant(q, k_pages, v_pages, k_scale_pages,
+                                          v_scale_pages, chunk_k, chunk_v,
+                                          block_table, starts, valid,
+                                          pages_per_tile=pages_per_tile,
+                                          interpret=interp)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

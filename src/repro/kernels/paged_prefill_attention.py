@@ -1,0 +1,256 @@
+"""Pallas TPU paged prefill-chunk attention kernel (flash-style, no gather).
+
+The chunked-prefill serving path attends one right-padded chunk of queries
+per sequence against (a) the sequence's already-written KV prefix, which
+lives in the global page pool ``(num_blocks, KVH, block_size, D)`` named by
+a per-sequence block table, and (b) the chunk's own fresh keys/values
+(causal).  The XLA fallback densifies the WHOLE pre-chunk page pool slice
+``(B, KVH, nb*bs, D)`` with a gather and concatenates the in-chunk keys —
+an O(table) HBM copy per chunk that is quadratic over a long prompt.  This
+kernel removes that copy: KV pages stream **in place** through the
+SMEM-prefetched block table (the same ``PrefetchScalarGridSpec`` index_map
+translation as the paged decode kernel) and an online softmax folds the
+page-resident prefix and the causal in-chunk segment into one pass, so
+per-chunk HBM reads are proportional to live tokens instead of the padded
+pool, with no densified intermediate.
+
+Grid (batch, kv_head, prefix_tile + 1).  The whole GQA head-group's chunk
+queries ride in one (group, C, D) tile — as in the decode kernel — so
+every live page is fetched once per KV head, not once per q head.  Each
+prefix grid step fetches ``pages_per_tile`` pages — replicated k/v inputs
+whose index_maps read consecutive block-table entries — so small
+``block_size`` pools still fill MXU tiles; the final grid step attends the
+causal in-chunk segment and finalizes.  Tiles fully past ``starts[b]``
+(the sequence's prefix length) skip compute via ``pl.when`` AND skip their
+DMAs: the index_map clamps dead logical blocks to the last live one, so
+the block index stops changing and the pipeline elides the copies.
+
+Conventions (mirroring ``attend_prefill_chunk_paged``):
+  * q: (B, H, C, D) chunk queries, row ``c`` at absolute position
+    ``starts[b] + c``;
+  * chunk_k / chunk_v: (B, KVH, C, D) the chunk's OWN keys/values (fresh
+    projections — on the int8 path these stay float, exactly like the
+    gather fallback, which only dequantizes the page-resident prefix);
+  * block_table: (B, nb) physical page ids, sentinel entries >= num_blocks
+    for unallocated logical blocks (clamped; masked by ``starts``);
+  * starts: (B,) tokens already resident in pages (= the chunk's first
+    absolute position); valid: (B,) real tokens in the chunk, 0 marking an
+    inactive row whose output the caller ignores.
+
+Every prefix position < starts[b] is visible to every chunk query (chunk
+positions are all >= starts[b], so causality holds unconditionally there);
+in-chunk key j is visible to query c iff ``j <= c`` and ``j < valid[b]``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pallas_compat import CompilerParams as _CompilerParams
+from repro.kernels.paged_decode_attention import (
+    NEG_INF,
+    _assemble_kv_tile,
+    _live_block_index,
+    _online_softmax_update,
+    _pad_block_table,
+    auto_pages_per_tile,
+)
+
+
+def _make_prefill_kernel(*, P: int, nt: int, scale: float, block_size: int,
+                         chunk_len: int, group: int, quant: bool):
+    """Kernel body closure.  Tensor-ref layout after the 3 scalar-prefetch
+    refs (block table, starts, valid):
+      q, k_page*P, v_page*P, [k_scale*P, v_scale*P,] chunk_k, chunk_v,
+      o, m_scr, l_scr, acc_scr
+
+    The q tile is the whole GQA group's chunk, (group, C, D), flattened to
+    (group * C, D) rows for the matmuls; flattened row r is query position
+    ``r % C`` of head ``r // C``, so the causal chunk mask depends on the
+    row only through ``r % C``.
+    """
+    rows_q = group * chunk_len
+
+    def kernel(bt_ref, st_ref, vd_ref, q_ref, *refs):
+        del bt_ref  # consumed by the index_maps (page translation)
+        k_refs = refs[:P]
+        v_refs = refs[P:2 * P]
+        if quant:
+            ks_refs = refs[2 * P:3 * P]
+            vs_refs = refs[3 * P:4 * P]
+            ck_ref, cv_ref, o_ref, m_scr, l_scr, acc_scr = refs[4 * P:]
+        else:
+            ks_refs = vs_refs = None
+            ck_ref, cv_ref, o_ref, m_scr, l_scr, acc_scr = refs[2 * P:]
+
+        b = pl.program_id(0)
+        t = pl.program_id(2)
+        start = st_ref[b]   # tokens already resident in pages
+        vd = vd_ref[b]      # real tokens in this row's chunk
+
+        @pl.when(t == 0)
+        def _init():
+            m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+            l_scr[...] = jnp.zeros_like(l_scr)
+            acc_scr[...] = jnp.zeros_like(acc_scr)
+
+        tile_rows = P * block_size
+        k_start = t * tile_rows
+
+        def q2():
+            return q_ref[0, 0].astype(jnp.float32).reshape(rows_q, -1)
+
+        @pl.when(jnp.logical_and(t < nt, k_start < start))
+        def _prefix():
+            k, v = _assemble_kv_tile(k_refs, v_refs, ks_refs, vs_refs, P)
+            s = jax.lax.dot_general(q2(), k, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32) * scale
+            # prefix position of column r: k_start + r; live iff < start.
+            # Chunk queries all sit at absolute positions >= start, so the
+            # causal constraint is implied — only liveness is masked.
+            k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(k_pos < start, s, NEG_INF)
+            _online_softmax_update(s, v, m_scr, l_scr, acc_scr)
+
+        @pl.when(t == nt)
+        def _chunk():
+            k = ck_ref[0, 0].astype(jnp.float32)             # (C, D)
+            v = cv_ref[0, 0].astype(jnp.float32)
+            s = jax.lax.dot_general(q2(), k, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32) * scale
+            shape = (rows_q, chunk_len)
+            c_idx = jax.lax.rem(
+                jax.lax.broadcasted_iota(jnp.int32, shape, 0), chunk_len)
+            j_idx = jax.lax.broadcasted_iota(jnp.int32, shape, 1)
+            mask = jnp.logical_and(j_idx <= c_idx, j_idx < vd)
+            s = jnp.where(mask, s, NEG_INF)
+            _online_softmax_update(s, v, m_scr, l_scr, acc_scr)
+
+        @pl.when(t == nt)
+        def _finalize():
+            denom = jnp.maximum(l_scr[...], 1e-20)
+            o_ref[0, 0] = (acc_scr[...] / denom[:, None]) \
+                .reshape(group, chunk_len, -1).astype(o_ref.dtype)
+
+    return kernel
+
+
+def _prefill_call(q, k_pages, v_pages, chunk_k, chunk_v, block_table,
+                  starts, valid, scale_pages, *, pages_per_tile, interpret):
+    """Shared pallas_call builder for the float / int8 twins
+    (``scale_pages`` is None or the (k_scale, v_scale) pair)."""
+    B, H, C, D = q.shape
+    N, KVH, bs, _ = k_pages.shape
+    nb = block_table.shape[1]
+    assert nb >= 1, "block table must cover at least one logical block"
+    assert H % KVH == 0
+    group = H // KVH
+    quant = scale_pages is not None
+    scale = 1.0 / math.sqrt(D)
+
+    P = pages_per_tile or auto_pages_per_tile(bs, nb)
+    P = max(1, min(P, nb))
+    nt = -(-nb // P)                 # prefix tiles; final grid step = chunk
+    W = nt * P
+    bt = _pad_block_table(block_table, N, W)
+    # the whole GQA group's chunk queries ride in one tile (decode-kernel
+    # pattern): pages are fetched once per KV head, not once per q head
+    qg = q.reshape(B, KVH, group, C, D)
+
+    def _q_idx(b, h, t, bt_ref, st_ref, vd_ref):
+        return (b, h, 0, 0, 0)
+
+    def _page_idx(b, h, t, bt_ref, st_ref, vd_ref, *, p):
+        # logical block t*P+p of sequence b -> physical page; blocks past
+        # the live prefix (dead tiles AND the chunk grid step t == nt)
+        # clamp to the last live block so their index never changes and
+        # the pipeline skips the dead DMAs
+        idx = _live_block_index(t * P + p, st_ref[b], bs, W)
+        return (bt_ref[b, idx], h, 0, 0)
+
+    def _scale_idx(b, h, t, bt_ref, st_ref, vd_ref, *, p):
+        idx = _live_block_index(t * P + p, st_ref[b], bs, W)
+        return (bt_ref[b, idx], h, 0)
+
+    def _chunk_idx(b, h, t, bt_ref, st_ref, vd_ref):
+        return (b, h, 0, 0)
+
+    page_spec = lambda p: pl.BlockSpec(  # noqa: E731
+        (1, 1, bs, D), functools.partial(_page_idx, p=p))
+    in_specs = [pl.BlockSpec((1, 1, group, C, D), _q_idx)]
+    in_specs += [page_spec(p) for p in range(P)]
+    in_specs += [page_spec(p) for p in range(P)]
+    inputs = [qg] + [k_pages] * P + [v_pages] * P
+    if quant:
+        k_scale_pages, v_scale_pages = scale_pages
+        sspec = lambda p: pl.BlockSpec(  # noqa: E731
+            (1, 1, bs), functools.partial(_scale_idx, p=p))
+        in_specs += [sspec(p) for p in range(P)]
+        in_specs += [sspec(p) for p in range(P)]
+        inputs += [k_scale_pages] * P + [v_scale_pages] * P
+    in_specs += [pl.BlockSpec((1, 1, C, D), _chunk_idx),
+                 pl.BlockSpec((1, 1, C, D), _chunk_idx)]
+    inputs += [chunk_k, chunk_v]
+
+    kernel = _make_prefill_kernel(P=P, nt=nt, scale=scale, block_size=bs,
+                                  chunk_len=C, group=group, quant=quant)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,  # block table + starts + valid, in SMEM
+        grid=(B, KVH, nt + 1),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, group, C, D), _q_idx),
+        scratch_shapes=[
+            pltpu.VMEM((group * C,), jnp.float32),
+            pltpu.VMEM((group * C,), jnp.float32),
+            pltpu.VMEM((group * C, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KVH, group, C, D), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(bt, starts.astype(jnp.int32), valid.astype(jnp.int32), *inputs)
+    return out.reshape(B, H, C, D)
+
+
+def paged_prefill_attention(q: jax.Array, k_pages: jax.Array,
+                            v_pages: jax.Array, chunk_k: jax.Array,
+                            chunk_v: jax.Array, block_table: jax.Array,
+                            starts: jax.Array, valid: jax.Array, *,
+                            pages_per_tile: int | None = None,
+                            interpret: bool = False) -> jax.Array:
+    """q: (B, H, C, D); k_pages/v_pages: (N, KVH, bs, D); chunk_k/chunk_v:
+    (B, KVH, C, D); block_table: (B, nb); starts/valid: (B,).  Returns
+    (B, H, C, D) — rows past ``valid[b]`` (and rows of ``valid == 0``
+    sequences) are garbage the caller must ignore, exactly like the gather
+    fallback.  ``pages_per_tile=None`` auto-derives the tile width from
+    ``block_size`` (``auto_pages_per_tile``)."""
+    return _prefill_call(q, k_pages, v_pages, chunk_k, chunk_v, block_table,
+                         starts, valid, None, pages_per_tile=pages_per_tile,
+                         interpret=interpret)
+
+
+def paged_prefill_attention_quant(q: jax.Array, k_pages: jax.Array,
+                                  v_pages: jax.Array,
+                                  k_scale_pages: jax.Array,
+                                  v_scale_pages: jax.Array,
+                                  chunk_k: jax.Array, chunk_v: jax.Array,
+                                  block_table: jax.Array, starts: jax.Array,
+                                  valid: jax.Array, *,
+                                  pages_per_tile: int | None = None,
+                                  interpret: bool = False) -> jax.Array:
+    """int8 page pool twin: k/v pages int8 with per-row scale pages
+    (N, KVH, bs); the prefix dequantizes in VMEM while the in-chunk
+    keys/values stay float (they are fresh projections — same contract as
+    the gather fallback)."""
+    return _prefill_call(q, k_pages, v_pages, chunk_k, chunk_v, block_table,
+                         starts, valid, (k_scale_pages, v_scale_pages),
+                         pages_per_tile=pages_per_tile, interpret=interpret)

@@ -47,16 +47,77 @@ def paged_decode_attention_ref(q: jax.Array, k_pages: jax.Array,
                                v_pages: jax.Array, block_table: jax.Array,
                                lengths: jax.Array) -> jax.Array:
     """XLA gather oracle for the paged kernel: densify each sequence's pages
-    through its block table, then run the dense decode reference.
+    through its block table (one stacked gather for k+v), then run the
+    dense decode reference.
 
     q: (B, H, D); k_pages/v_pages: (N, KVH, bs, D); block_table: (B, nb)
     physical page ids (sentinel entries >= N allowed — masked by lengths);
     lengths: (B,) valid tokens INCLUDING the newest one.
     """
-    from repro.kernels.paged_decode_attention import gather_kv_pages
-    k = gather_kv_pages(k_pages, block_table)
-    v = gather_kv_pages(v_pages, block_table)
+    from repro.kernels.paged_decode_attention import gather_kv_pages_fused
+    k, v = gather_kv_pages_fused(k_pages, v_pages, block_table)
     return decode_attention_ref(q, k, v, lengths)
+
+
+def _prefill_chunk_ref(q, k_dense, v_dense, chunk_k, chunk_v, starts, valid):
+    """Two-segment masked softmax shared by the paged prefill oracles:
+    dense pre-chunk kv (B, KVH, S, D) + causal in-chunk segment."""
+    B, H, C, D = q.shape
+    KVH, S = k_dense.shape[1], k_dense.shape[2]
+    group = H // KVH
+    k_all = jnp.concatenate([k_dense, chunk_k], axis=2).astype(jnp.float32)
+    v_all = jnp.concatenate([v_dense, chunk_v], axis=2).astype(jnp.float32)
+    qg = q.reshape(B, KVH, group, C, D).astype(jnp.float32)
+    s = jnp.einsum("bkgcd,bksd->bkgcs", qg, k_all) / math.sqrt(D)
+    s_idx = jnp.arange(S)[None, None, :]                      # (1, 1, S)
+    cache_mask = jnp.broadcast_to(s_idx < starts[:, None, None], (B, C, S))
+    c_idx = jnp.arange(C)[None, :, None]                      # (1, C, 1)
+    j_idx = jnp.arange(C)[None, None, :]                      # (1, 1, C)
+    chunk_mask = jnp.broadcast_to(
+        (j_idx <= c_idx) & (j_idx < valid[:, None, None]), (B, C, C))
+    mask = jnp.concatenate([cache_mask, chunk_mask], axis=-1)
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgcs,bksd->bkgcd", p, v_all)
+    return o.reshape(B, H, C, D).astype(q.dtype)
+
+
+def paged_prefill_attention_ref(q: jax.Array, k_pages: jax.Array,
+                                v_pages: jax.Array, chunk_k: jax.Array,
+                                chunk_v: jax.Array, block_table: jax.Array,
+                                starts: jax.Array,
+                                valid: jax.Array) -> jax.Array:
+    """XLA gather oracle for the fused paged prefill-chunk kernel: densify
+    the pre-chunk pages, append the in-chunk keys, and apply the same
+    two-segment mask as ``attend_prefill_chunk_paged``'s fallback.
+
+    q: (B, H, C, D); k_pages/v_pages: (N, KVH, bs, D); chunk_k/chunk_v:
+    (B, KVH, C, D); block_table: (B, nb); starts/valid: (B,).  Rows past
+    ``valid[b]`` are garbage (ignored by callers), matching the kernel.
+    """
+    from repro.kernels.paged_decode_attention import gather_kv_pages_fused
+    k, v = gather_kv_pages_fused(k_pages, v_pages, block_table)
+    return _prefill_chunk_ref(q, k, v, chunk_k, chunk_v, starts, valid)
+
+
+def paged_prefill_attention_quant_ref(q: jax.Array, k_pages: jax.Array,
+                                      v_pages: jax.Array,
+                                      k_scale_pages: jax.Array,
+                                      v_scale_pages: jax.Array,
+                                      chunk_k: jax.Array, chunk_v: jax.Array,
+                                      block_table: jax.Array,
+                                      starts: jax.Array,
+                                      valid: jax.Array) -> jax.Array:
+    """int8 twin of ``paged_prefill_attention_ref``: the page-resident
+    prefix dequantizes through gathered scale pages; the in-chunk k/v stay
+    float (fresh projections)."""
+    from repro.kernels.paged_decode_attention import gather_kv_pages_fused
+    k, v = gather_kv_pages_fused(k_pages, v_pages, block_table)
+    ks, vs = gather_kv_pages_fused(k_scale_pages, v_scale_pages, block_table)
+    k = k.astype(jnp.float32) * ks.astype(jnp.float32)[..., None]
+    v = v.astype(jnp.float32) * vs.astype(jnp.float32)[..., None]
+    return _prefill_chunk_ref(q, k.astype(q.dtype), v.astype(q.dtype),
+                              chunk_k, chunk_v, starts, valid)
 
 
 def ssd_scan_ref(x, dt, A, Bm, Cm):

@@ -16,6 +16,21 @@ The paged serving twins (``attend_decode_paged`` /
 page pool ``{"k": (num_blocks, KVH, block_size, D), ...}`` addressed
 through per-sequence block tables (full attention only — see
 ``init_paged_kv_cache``).
+
+Backend support matrix (``EngineConfig.attention_backend`` selects the
+column; every cell is token-identical to ``xla``):
+
+  capability           xla    pallas  paged-xla  paged-pallas
+  chunked prefill      yes    yes(*)  yes        yes (fused kernel)
+  paged KV pool        no     no      yes        yes (block-table kernels)
+  int8 KV (kv_quant)   yes    yes     yes        yes (fused dequant)
+  sliding window       yes    partial no         no
+  decode kernel        jnp    Pallas  gather     Pallas multi-page tiles
+
+  (*) "pallas" accelerates train/prefill (flash) and dense decode; the
+  chunked-prefill chunk step itself uses the jnp two-segment path, and
+  rolling SWA decode always falls back to jnp slot-validity masking.
+  Paged backends require full attention + chunked prefill (engine gates).
 """
 from __future__ import annotations
 
@@ -446,13 +461,18 @@ def _gather_dense_kv(cfg, cache: Dict[str, jax.Array], block_table: jax.Array,
                      dtype) -> Tuple[jax.Array, jax.Array]:
     """Densify a page pool through block tables -> (B, KVH, nb*bs, D) k/v
     (dequantized for int8 pools).  The XLA reference path on CPU; positions
-    past each sequence's length hold garbage the caller must mask."""
-    from repro.kernels.paged_decode_attention import gather_kv_pages
-    k = gather_kv_pages(cache["k"], block_table)
-    v = gather_kv_pages(cache["v"], block_table)
+    past each sequence's length hold garbage the caller must mask.
+
+    k and v (and the scale pair on the quant path) ride ONE stacked gather
+    each (``gather_kv_pages_fused``) — two gathers total instead of four
+    for int8 pools, one instead of two for float."""
+    from repro.kernels.paged_decode_attention import gather_kv_pages_fused
+    k, v = gather_kv_pages_fused(cache["k"], cache["v"], block_table)
     if cfg.kv_quant:
-        k = _dequantize_kv(k, gather_kv_pages(cache["k_scale"], block_table), dtype)
-        v = _dequantize_kv(v, gather_kv_pages(cache["v_scale"], block_table), dtype)
+        ks, vs = gather_kv_pages_fused(cache["k_scale"], cache["v_scale"],
+                                       block_table)
+        k = _dequantize_kv(k, ks, dtype)
+        v = _dequantize_kv(v, vs, dtype)
     return k, v
 
 
@@ -496,10 +516,12 @@ def attend_decode_paged(params, cfg, x: jax.Array, lengths: jax.Array,
         if cfg.kv_quant:
             attn = kernel_ops.paged_decode_attention_quant(
                 q1, new_cache["k"], new_cache["v"], new_cache["k_scale"],
-                new_cache["v_scale"], block_table, kv_valid)
+                new_cache["v_scale"], block_table, kv_valid,
+                pages_per_tile=cfg.paged_pages_per_tile)
         else:
             attn = kernel_ops.paged_decode_attention(
-                q1, new_cache["k"], new_cache["v"], block_table, kv_valid)
+                q1, new_cache["k"], new_cache["v"], block_table, kv_valid,
+                pages_per_tile=cfg.paged_pages_per_tile)
     else:
         k_dense, v_dense = _gather_dense_kv(cfg, new_cache, block_table, x.dtype)
         mask = (jnp.arange(nb * bs)[None, :] < kv_valid[:, None])[:, None, None, :]
@@ -519,10 +541,15 @@ def attend_prefill_chunk_paged(params, cfg, x: jax.Array,
     inactive) except the chunk's k/v scatter to (page, offset) pairs named
     by ``block_table`` instead of per-slot dense rows.  Full attention only.
 
-    The attention itself densifies the PRE-chunk pages with an XLA gather
-    (prefill is compute-bound; only the decode hot loop gets the Pallas
-    block-table kernel) and appends the in-chunk keys, exactly mirroring the
-    dense chunk path's two-segment masking.
+    With ``cfg.use_pallas_attention`` the attention runs the flash-style
+    paged prefill-chunk kernel: KV pages stream in place through the
+    SMEM-prefetched block table and an online softmax folds the
+    page-resident prefix with the causal in-chunk segment — per-chunk HBM
+    reads proportional to live tokens, no densified copy.  The XLA
+    fallback densifies the PRE-chunk pages with one stacked gather and
+    appends the in-chunk keys, exactly mirroring the dense chunk path's
+    two-segment masking (the CPU oracle the kernel is parity-tested
+    against).
     """
     B, C, _ = x.shape
     num_blocks, bs = _paged_dims(cache)
@@ -541,10 +568,29 @@ def attend_prefill_chunk_paged(params, cfg, x: jax.Array,
     new_cache = _write_pages(cfg, cache, k, v, page, offset)
 
     # ---- attention: [pre-chunk pages | in-chunk keys] --------------------
-    old_k, old_v = _gather_dense_kv(cfg, cache, block_table, x.dtype)
     qh = q.transpose(0, 2, 1, 3)                                 # (B, H, C, hd)
     kh = k.transpose(0, 2, 1, 3)                                 # (B, KVH, C, hd)
     vh = v.transpose(0, 2, 1, 3)
+    starts_i = starts.astype(jnp.int32)
+    valid_i = valid.astype(jnp.int32)
+
+    if cfg.use_pallas_attention:
+        # fused kernel: prefix pages stream in place (reads the PRE-write
+        # pool, same as the gather below), in-chunk k/v stay float
+        from repro.kernels import ops as kernel_ops
+        if cfg.kv_quant:
+            attn = kernel_ops.paged_prefill_attention_quant(
+                qh, cache["k"], cache["v"], cache["k_scale"],
+                cache["v_scale"], kh, vh, block_table, starts_i, valid_i,
+                pages_per_tile=cfg.paged_pages_per_tile)
+        else:
+            attn = kernel_ops.paged_prefill_attention(
+                qh, cache["k"], cache["v"], kh, vh, block_table, starts_i,
+                valid_i, pages_per_tile=cfg.paged_pages_per_tile)
+        out = attn.transpose(0, 2, 1, 3).reshape(B, C, cfg.num_heads * hd)
+        return out @ params["wo"], new_cache
+
+    old_k, old_v = _gather_dense_kv(cfg, cache, block_table, x.dtype)
     k_all = jnp.concatenate([old_k, kh], axis=2)                 # (B, KVH, S+C, hd)
     v_all = jnp.concatenate([old_v, vh], axis=2)
 

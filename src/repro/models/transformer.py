@@ -273,7 +273,9 @@ def prefill_chunk_paged(params, cfg, tokens: jax.Array, starts: jax.Array,
                         valid: jax.Array, block_table: jax.Array, cache):
     """``prefill_chunk`` against the paged KV pool: same contract, plus the
     per-sequence ``block_table`` (B, nb) naming the pages each row's chunk
-    writes into (one table for all layers — each layer has its own pool)."""
+    writes into (one table for all layers — each layer has its own pool).
+    With ``cfg.use_pallas_attention`` every layer's chunk attention runs
+    the fused paged prefill kernel (pages streamed in place, no gather)."""
     x = embed_tokens(params, cfg, tokens)
     B, C, _ = x.shape
     positions = starts[:, None] + jnp.arange(C)[None, :]

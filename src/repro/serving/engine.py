@@ -30,6 +30,23 @@ Orca/vLLM:
     sequence's pages, and freed pages are physically reused by later
     admissions.  Token-for-token identical to the dense backends.
 
+Backend support matrix (rows = engine capabilities; see
+``models/attention.py`` for the kernel-level view):
+
+  backend        KV layout       prefill chunk        decode
+  "xla"          per-slot dense  jnp two-segment      jnp masked SDPA
+  "pallas"       per-slot dense  jnp two-segment      Pallas blocked kernel
+  "paged-xla"    page pool       stacked-gather SDPA  gather + masked SDPA
+  "paged-pallas" page pool       fused paged-prefill  paged multi-page-tile
+                                 Pallas kernel        Pallas kernel
+
+  * dense backends: all archs, incl. SWA (rolling cache) and kv_quant;
+    SSM/hybrid/enc-dec ride the legacy single-shot prefill.
+  * paged backends: full-attention transformer archs with chunked prefill
+    only (engine __init__ gates); kv_quant supported via int8 page pools
+    with fused-dequant kernels; ``EngineConfig.pages_per_tile`` tunes the
+    kernels' multi-page kv tiles (None = auto from block_size).
+
 Dense cache pytrees have layout (layers/sites, batch, ...), so slot insert
 / extract are uniform ``tree_map``s over axis 1; paged caches have no
 batch axis and are extracted/restored by page id instead.
@@ -73,6 +90,11 @@ class EngineConfig:
     # paged block-table pool (full-attention transformer archs with
     # chunked prefill only).
     attention_backend: Optional[str] = None
+    # KV pages per kernel grid step for the paged Pallas kernels (decode +
+    # fused prefill-chunk): multi-page tiles keep MXU tiles full when
+    # block_size is small.  None = auto-derive from block_size (targets
+    # 128-row tiles); forwarded to the model config's paged_pages_per_tile.
+    pages_per_tile: Optional[int] = None
 
     @property
     def paged(self) -> bool:
@@ -171,15 +193,20 @@ class ContinuousBatchingEngine:
 
     def _with_backend(self, model: Model) -> Model:
         """Route the model's attention through the configured backend
-        (None = keep the model config's own use_pallas_attention)."""
+        (None = keep the model config's own use_pallas_attention) and
+        forward the paged-kernel tile tunable."""
         backend = self.cfg.attention_backend
-        if backend is None:
-            return model
-        want = backend.endswith("pallas")
-        if model.cfg.use_pallas_attention != want:
+        changes = {}
+        if backend is not None:
+            want = backend.endswith("pallas")
+            if model.cfg.use_pallas_attention != want:
+                changes["use_pallas_attention"] = want
+        if self.cfg.pages_per_tile is not None \
+                and model.cfg.paged_pages_per_tile != self.cfg.pages_per_tile:
+            changes["paged_pages_per_tile"] = self.cfg.pages_per_tile
+        if changes:
             from repro.models.model_factory import build_model
-            return build_model(dataclasses.replace(
-                model.cfg, use_pallas_attention=want))
+            return build_model(dataclasses.replace(model.cfg, **changes))
         return model
 
     def _init_cache(self):

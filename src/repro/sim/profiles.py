@@ -97,4 +97,9 @@ def calibrate_from_engine(engine, token_capacity: int,
         token_capacity=token_capacity,
         swap_time=swap_time,
         model_max_tokens=model_max_tokens,
-        prefill_chunk_tokens=engine.cfg.prefill_chunk_tokens or None)
+        prefill_chunk_tokens=engine.cfg.prefill_chunk_tokens or None,
+        # carry the model's window so sim/RWT chunk counts reproduce the
+        # engine's window-clamped quantum (engine._chunk_quantum also caps
+        # at max_seq_len, so mirror both bounds)
+        sliding_window=None if engine.model.cfg.sliding_window is None
+        else min(engine.model.cfg.sliding_window, engine.cfg.max_seq_len))

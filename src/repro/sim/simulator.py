@@ -183,7 +183,13 @@ class SimInstance:
         if hw is None or not self.running:
             self.busy_until = now + extra
             return self.busy_until, []
+        # per-model quantum: the engine clamps its chunk to the model's
+        # sliding window (engine._chunk_quantum); HardwareProfile carries
+        # the window and owns the clamp (hw.chunk_quantum) so sim chunk
+        # counts match the engine for SWA models
         chunk = self.traits.prefill_chunk_tokens
+        if chunk:
+            chunk = hw.chunk_quantum(chunk)
         dur = extra
         if chunk:
             # chunked prefill (mirrors the real engine's step()): every

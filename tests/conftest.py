@@ -8,6 +8,13 @@ import jax
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "pallas: Pallas-kernel parity tests (interpret mode off-TPU) — "
+        "select with `-m pallas`, skip with `-m 'not pallas'`")
+
+
 @pytest.fixture(scope="session")
 def rng_key():
     return jax.random.key(0)

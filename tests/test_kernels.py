@@ -7,6 +7,8 @@ import pytest
 
 from repro.kernels import ops, ref
 
+pytestmark = pytest.mark.pallas
+
 
 def _tol(dtype):
     return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
