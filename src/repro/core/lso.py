@@ -75,6 +75,9 @@ class QLMAgent:
                             break
 
     def run_iteration(self):
-        """sync + one engine step (the serve loop quantum)."""
+        """sync + one engine iteration (the serve loop quantum).  Engines
+        configured with ``decode_burst > 1`` fuse up to that many decode
+        iterations into the dispatch (``steps()`` falls back to ``step()``
+        at burst 1, and to single-step whenever a slot is mid-prefill)."""
         self.sync()
-        return self.engine.step()
+        return self.engine.steps()

@@ -67,30 +67,34 @@ def paged_decode_attention_quant(q, k_pages, v_pages, k_scale_pages,
                                          interpret=interp)
 
 
-@functools.partial(jax.jit, static_argnames=("pages_per_tile", "interpret"))
+@functools.partial(jax.jit, static_argnames=("pages_per_tile", "q_tile",
+                                             "interpret"))
 def paged_prefill_attention(q, k_pages, v_pages, chunk_k, chunk_v,
                             block_table, starts, valid, *,
                             pages_per_tile: int | None = None,
+                            q_tile: int | None = None,
                             interpret: bool | None = None):
     interp = _default_interpret() if interpret is None else interpret
     return _paged_prefill_attention(q, k_pages, v_pages, chunk_k, chunk_v,
                                     block_table, starts, valid,
                                     pages_per_tile=pages_per_tile,
-                                    interpret=interp)
+                                    q_tile=q_tile, interpret=interp)
 
 
-@functools.partial(jax.jit, static_argnames=("pages_per_tile", "interpret"))
+@functools.partial(jax.jit, static_argnames=("pages_per_tile", "q_tile",
+                                             "interpret"))
 def paged_prefill_attention_quant(q, k_pages, v_pages, k_scale_pages,
                                   v_scale_pages, chunk_k, chunk_v,
                                   block_table, starts, valid, *,
                                   pages_per_tile: int | None = None,
+                                  q_tile: int | None = None,
                                   interpret: bool | None = None):
     interp = _default_interpret() if interpret is None else interpret
     return _paged_prefill_attention_quant(q, k_pages, v_pages, k_scale_pages,
                                           v_scale_pages, chunk_k, chunk_v,
                                           block_table, starts, valid,
                                           pages_per_tile=pages_per_tile,
-                                          interpret=interp)
+                                          q_tile=q_tile, interpret=interp)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))

@@ -35,6 +35,10 @@ def main(argv=None) -> dict:
     ap.add_argument("--rate", type=float, default=2.0)
     ap.add_argument("--max-new-tokens", type=int, default=16)
     ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--decode-burst", type=int, default=1,
+                    help="fused decode iterations per engine dispatch "
+                         "(QLMAgent.run_iteration drives steps(); 1 = the "
+                         "single-step loop)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -50,7 +54,8 @@ def main(argv=None) -> dict:
         registry[name] = (model, model.init(key))
 
     engines, agents, infos = [], [], []
-    ecfg = EngineConfig(max_slots=args.slots, max_seq_len=128)
+    ecfg = EngineConfig(max_slots=args.slots, max_seq_len=128,
+                        decode_burst=args.decode_burst)
     for i in range(args.instances):
         m0, p0 = registry[arch_names[0]]
         eng = ContinuousBatchingEngine(m0, p0, ecfg, model_name=arch_names[0])

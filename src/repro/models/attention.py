@@ -289,8 +289,17 @@ def attend_prefill_chunk(params, cfg, x: jax.Array, positions: jax.Array,
 
     The attention is computed in two kv segments so a rolling SWA cache
     never reads a slot this same chunk just overwrote: the PRE-chunk cache
-    (positions <= start-1, read from the cache as it was on entry) and the
-    in-chunk keys (read from the fresh projections).
+    (positions <= start-1) and the in-chunk keys (read from the fresh
+    projections).
+
+    Donation note: for FULL attention the pre-chunk segment reads the
+    POST-write cache — the chunk writes land at slots >= start while the
+    segment mask only passes slots < start, so the values are identical
+    and the (donated) cache buffer has no consumer besides the in-place
+    update, letting XLA skip the per-chunk pool copy.  Rolling SWA keeps
+    the pre-write read (slot aliasing: this chunk may overwrite slots the
+    mask still passes), which forces a copy when donated — correctness
+    first.
     """
     B, C, _ = x.shape
     S = cache["k"].shape[2]
@@ -312,14 +321,16 @@ def attend_prefill_chunk(params, cfg, x: jax.Array, positions: jax.Array,
             "k_scale": cache["k_scale"].at[b_idx, :, write_slot].set(ks, mode="drop"),
             "v_scale": cache["v_scale"].at[b_idx, :, write_slot].set(vs, mode="drop"),
         }
-        old_k = _dequantize_kv(cache["k"], cache["k_scale"], x.dtype)
-        old_v = _dequantize_kv(cache["v"], cache["v_scale"], x.dtype)
+        read = cache if cfg.sliding_window is not None else new_cache
+        old_k = _dequantize_kv(read["k"], read["k_scale"], x.dtype)
+        old_v = _dequantize_kv(read["v"], read["v_scale"], x.dtype)
     else:
         new_cache = {
             "k": cache["k"].at[b_idx, :, write_slot, :].set(k, mode="drop"),
             "v": cache["v"].at[b_idx, :, write_slot, :].set(v, mode="drop"),
         }
-        old_k, old_v = cache["k"], cache["v"]
+        read = cache if cfg.sliding_window is not None else new_cache
+        old_k, old_v = read["k"], read["v"]
 
     # ---- attention: [pre-chunk cache | in-chunk keys] --------------------
     qh = q.transpose(0, 2, 1, 3)                                 # (B, H, C, hd)
@@ -550,6 +561,13 @@ def attend_prefill_chunk_paged(params, cfg, x: jax.Array,
     appends the in-chunk keys, exactly mirroring the dense chunk path's
     two-segment masking (the CPU oracle the kernel is parity-tested
     against).
+
+    Donation note: both the kernel and the gather fallback read the
+    POST-write pool.  The chunk's page writes land at logical positions
+    >= start while the prefix segment masks to positions < start, so the
+    attended values are identical to a pre-write read — and the donated
+    pool buffer's only consumer is the in-place scatter, so XLA updates
+    the pages without copying the pool each chunk.
     """
     B, C, _ = x.shape
     num_blocks, bs = _paged_dims(cache)
@@ -575,22 +593,23 @@ def attend_prefill_chunk_paged(params, cfg, x: jax.Array,
     valid_i = valid.astype(jnp.int32)
 
     if cfg.use_pallas_attention:
-        # fused kernel: prefix pages stream in place (reads the PRE-write
-        # pool, same as the gather below), in-chunk k/v stay float
+        # fused kernel: prefix pages stream in place from the POST-write
+        # pool (rows >= start are masked — see the donation note above),
+        # in-chunk k/v stay float
         from repro.kernels import ops as kernel_ops
         if cfg.kv_quant:
             attn = kernel_ops.paged_prefill_attention_quant(
-                qh, cache["k"], cache["v"], cache["k_scale"],
-                cache["v_scale"], kh, vh, block_table, starts_i, valid_i,
+                qh, new_cache["k"], new_cache["v"], new_cache["k_scale"],
+                new_cache["v_scale"], kh, vh, block_table, starts_i, valid_i,
                 pages_per_tile=cfg.paged_pages_per_tile)
         else:
             attn = kernel_ops.paged_prefill_attention(
-                qh, cache["k"], cache["v"], kh, vh, block_table, starts_i,
-                valid_i, pages_per_tile=cfg.paged_pages_per_tile)
+                qh, new_cache["k"], new_cache["v"], kh, vh, block_table,
+                starts_i, valid_i, pages_per_tile=cfg.paged_pages_per_tile)
         out = attn.transpose(0, 2, 1, 3).reshape(B, C, cfg.num_heads * hd)
         return out @ params["wo"], new_cache
 
-    old_k, old_v = _gather_dense_kv(cfg, cache, block_table, x.dtype)
+    old_k, old_v = _gather_dense_kv(cfg, new_cache, block_table, x.dtype)
     k_all = jnp.concatenate([old_k, kh], axis=2)                 # (B, KVH, S+C, hd)
     v_all = jnp.concatenate([old_v, vh], axis=2)
 

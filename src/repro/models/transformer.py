@@ -3,6 +3,17 @@
 Per-layer params are stacked on a leading ``layers`` axis and the forward
 pass is a ``jax.lax.scan`` over blocks (keeps HLO size O(1) in depth — 95
 layers for deepseek-67b — and gives the remat boundary for training).
+
+Serving-cache donation contract: the engine jits ``decode_step(_paged)``
+and ``prefill_chunk(_paged)`` with the cache pytree DONATED
+(``jax.jit(..., donate_argnums)``), so every cache leaf here must be
+update-in-place friendly — the functional ``.at[].set`` writes are the
+only consumers of the incoming buffers, and any attention read of "the
+cache as it was on entry" must be expressible against the post-write
+arrays (see the donation notes in ``models/attention.py``; rolling SWA is
+the one path that genuinely needs the pre-write copy).  The per-layer
+``lax.scan`` keeps this property: the stacked cache rides as scan
+xs/ys, which XLA aliases when the donated input allows it.
 """
 from __future__ import annotations
 

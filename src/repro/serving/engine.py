@@ -15,6 +15,17 @@ Orca/vLLM:
     co-scheduling),
   * ``step()`` = admit-from-pull-source, one prefill chunk round, one
     decode iteration for all decode-ready slots,
+  * **device-resident hot loop**: the jitted decode / chunk calls DONATE
+    the KV cache (``jax.jit(..., donate_argnums)``) so the page pool is
+    updated in place instead of copied every iteration; the block table is
+    maintained incrementally by ``BlockManager`` (persistent fixed-shape
+    int32 array + version counter) and its device copy refreshed only when
+    it changed; ``steps(k)`` fuses up to ``EngineConfig.decode_burst``
+    decode iterations into ONE jitted ``lax.while_loop`` dispatch
+    (device-side argmax, length increments and EOS / max-token finish
+    flags accumulated in a mask) with a single host sync per burst —
+    falling back to single-step whenever a slot is mid-prefill or the
+    block pool is at the preemption edge,
   * request eviction with host-side KV/state snapshots (the paper's
     eviction LSO — resume skips prefill entirely; mid-prefill evictions
     resume from the last completed chunk),
@@ -46,6 +57,13 @@ Backend support matrix (rows = engine capabilities; see
     only (engine __init__ gates); kv_quant supported via int8 page pools
     with fused-dequant kernels; ``EngineConfig.pages_per_tile`` tunes the
     kernels' multi-page kv tiles (None = auto from block_size).
+  * donation + burst apply to ALL four backends: every backend's decode /
+    chunk jit call donates the cache (``EngineConfig.donate_buffers``,
+    default on), and ``steps()`` bursts ``decode_burst`` iterations per
+    dispatch token-identically to the single-step loop (KV blocks for the
+    whole burst are reserved up front, so a burst can never write an
+    unallocated page; completion timestamps within a burst collapse to
+    the burst's host sync).
 
 Dense cache pytrees have layout (layers/sites, batch, ...), so slot insert
 / extract are uniform ``tree_map``s over axis 1; paged caches have no
@@ -95,6 +113,19 @@ class EngineConfig:
     # block_size is small.  None = auto-derive from block_size (targets
     # 128-row tiles); forwarded to the model config's paged_pages_per_tile.
     pages_per_tile: Optional[int] = None
+    # Fused multi-step decode dispatch: ``steps()`` runs up to this many
+    # decode iterations inside one jitted lax.while_loop (one host sync per
+    # burst instead of per token).  1 = the single-step ``step()`` loop.
+    decode_burst: int = 1
+    # Donate the KV cache (and decode token array) into the jitted decode /
+    # chunk calls so XLA updates the pool in place instead of copying it
+    # every iteration.  Off only for A/B benchmarking (engine_bench.py).
+    donate_buffers: bool = True
+    # Maintain the (max_slots, max_blocks_per_seq) block table incrementally
+    # inside BlockManager (refreshing the device copy only when it changed)
+    # instead of rebuilding it in Python twice per step.  Off only for A/B
+    # benchmarking against the seed behavior.
+    incremental_block_table: bool = True
 
     @property
     def paged(self) -> bool:
@@ -176,6 +207,13 @@ class ContinuousBatchingEngine:
                     "path writes per-slot dense caches")
 
         self.block_mgr = BlockManager(cfg.resolved_kv_blocks(), cfg.block_size)
+        if cfg.incremental_block_table:
+            self.block_mgr.attach_slot_table(cfg.max_slots,
+                                             cfg.max_blocks_per_seq())
+        # persistent device copy of the slot block table, refreshed only
+        # when BlockManager.table_version moves
+        self._bt_device = None
+        self._bt_version_seen = -1
         self.slots: List[Optional[Request]] = [None] * cfg.max_slots
         self.lengths = np.zeros(cfg.max_slots, np.int32)
         # prompt tokens already prefilled per slot; a slot is mid-prefill
@@ -218,13 +256,28 @@ class ContinuousBatchingEngine:
                                      self.cfg.dtype)
 
     def _jit_compute(self) -> None:
+        # donate the cache (arg 1) — the page pool is the whole KV budget,
+        # donating it lets XLA update it in place instead of copying it
+        # every iteration — and the decode token array (arg 2), which is
+        # consumed by the same-shaped next_tokens output.  The block table
+        # (last paged arg) is NEVER donated: it is the persistent device
+        # copy reused across steps.
+        donate = (1, 2) if self.cfg.donate_buffers else ()
+        chunk_donate = (1,) if self.cfg.donate_buffers else ()
         if self.paged:
-            self._decode_fn = jax.jit(self._decode_paged_impl)
-            self._chunk_fn = jax.jit(self._prefill_chunk_paged_impl)
+            self._decode_fn = jax.jit(self._decode_paged_impl,
+                                      donate_argnums=donate)
+            self._chunk_fn = jax.jit(self._prefill_chunk_paged_impl,
+                                     donate_argnums=chunk_donate)
         else:
-            self._decode_fn = jax.jit(self._decode_impl)
-            self._chunk_fn = jax.jit(self._prefill_chunk_impl)
+            self._decode_fn = jax.jit(self._decode_impl, donate_argnums=donate)
+            self._chunk_fn = jax.jit(self._prefill_chunk_impl,
+                                     donate_argnums=chunk_donate)
+        self._burst_fn = jax.jit(self._decode_burst_impl,
+                                 donate_argnums=chunk_donate)
         self._prefill_cache = {}  # per-length jitted single-shot prefill
+        self._bt_device = None
+        self._bt_version_seen = -1
 
     # ------------------------------------------------------------------
     # jitted compute
@@ -253,12 +306,68 @@ class ContinuousBatchingEngine:
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return tok, new_cache
 
+    def _decode_burst_impl(self, params, cache, tokens, lengths, remaining,
+                           active, n_steps, block_table):
+        """Up to ``decode_burst`` decode iterations in ONE device dispatch:
+        a ``lax.while_loop`` carrying (tokens, lengths, remaining-new-token
+        budgets, active mask, cache) with the argmax, length increments and
+        EOS / max-token / max-seq-len finish flags all computed on device.
+        Returns the (decode_burst, max_slots) token buffer (sentinel -1 for
+        slots inactive at that iteration) and the final cache — ONE host
+        sync per burst instead of one per token.
+
+        ``n_steps`` is traced (bursts shrink near the KV-capacity edge
+        without recompiling); the buffer width is the static
+        ``cfg.decode_burst``.  The caller pre-reserves every block a full
+        burst can write, so no iteration ever lands on an unallocated page.
+        Finished slots keep re-writing their final token's k/v at their
+        (frozen) last position — idempotent, and their pages are freed at
+        the host sync.  ``block_table`` is None for the dense backends.
+        """
+        K = max(int(self.cfg.decode_burst), 1)
+        max_seq = self.cfg.max_seq_len
+        eos = self.cfg.eos_token
+
+        def body(state):
+            i, tokens, lengths, remaining, active, cache, out = state
+            if self.paged:
+                logits, cache = self.model.decode_step_paged(
+                    params, cache, tokens, lengths, block_table)
+            else:
+                logits, cache = self.model.decode_step(
+                    params, cache, tokens, lengths)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            produced = jnp.where(active, nxt, tokens)
+            out = jax.lax.dynamic_update_index_in_dim(
+                out, jnp.where(active, nxt, jnp.int32(-1)), i, axis=0)
+            step = active.astype(jnp.int32)
+            lengths = lengths + step
+            remaining = remaining - step
+            # mirror _finish_if_done exactly (post-increment conditions)
+            fin = (remaining <= 0) | (lengths >= max_seq)
+            if eos is not None:
+                fin = fin | (produced == eos)
+            return (i + 1, produced, lengths, remaining,
+                    active & ~fin, cache, out)
+
+        def cond(state):
+            return (state[0] < n_steps) & jnp.any(state[4])
+
+        out0 = jnp.full((K, self.cfg.max_slots), -1, jnp.int32)
+        state = (jnp.int32(0), tokens, lengths, remaining, active, cache, out0)
+        state = jax.lax.while_loop(cond, body, state)
+        return state[6], state[5]
+
     def _block_table_array(self) -> np.ndarray:
-        """Materialize the BlockManager block tables as one fixed-shape
-        (max_slots, max_blocks_per_seq) int32 array for the jitted paged
-        calls.  Unallocated logical blocks (and empty slots) hold the
-        sentinel ``num_blocks``, which drops writes and is clamped+masked
-        on reads."""
+        """From-scratch rebuild of the (max_slots, max_blocks_per_seq) int32
+        block table (sentinel ``num_blocks`` for unallocated logical blocks
+        and empty slots — writes dropped, reads clamped+masked).
+
+        This is the REFERENCE path: the hot loop uses the incremental table
+        ``BlockManager.slot_table()`` via ``_device_block_table`` and only
+        falls back here when ``cfg.incremental_block_table`` is off (seed
+        behavior, kept for A/B benchmarking).  The property suite asserts
+        the two always agree."""
         sentinel = self.block_mgr.num_blocks
         bt = np.full((self.cfg.max_slots, self.cfg.max_blocks_per_seq()),
                      sentinel, np.int32)
@@ -269,6 +378,21 @@ class ContinuousBatchingEngine:
                 assert len(row) <= bt.shape[1], (len(row), bt.shape)
                 bt[i, :len(row)] = row
         return bt
+
+    def _device_block_table(self):
+        """Device copy of the slot block table, re-uploaded only when the
+        BlockManager's incremental table changed since the last dispatch
+        (the seed rebuilt + re-uploaded the full table twice per step)."""
+        if not self.cfg.incremental_block_table:
+            return jnp.asarray(self._block_table_array())
+        version = self.block_mgr.table_version
+        if self._bt_device is None or self._bt_version_seen != version:
+            # .copy(): the manager mutates its table in place and jnp.asarray
+            # may alias host memory on CPU — the device copy must be a
+            # snapshot of THIS version
+            self._bt_device = jnp.asarray(self.block_mgr.slot_table().copy())
+            self._bt_version_seen = version
+        return self._bt_device
 
     def _prefill_one(self, prompt: np.ndarray, extras: Dict[str, Any]):
         """Prefill a single request (batch=1, exact length — SSM-state safe)."""
@@ -450,6 +574,7 @@ class ContinuousBatchingEngine:
             else:
                 alloc_tokens = int(snap.get("kv_tokens", ppos))
             blocks = self.block_mgr.allocate(req.req_id, alloc_tokens)
+            self.block_mgr.bind_slot(req.req_id, slot)
             if self.paged:
                 self._restore_pages(snap["cache"], blocks)
             else:
@@ -462,6 +587,7 @@ class ContinuousBatchingEngine:
         elif self._use_chunked(ex):
             first = min(self._chunk_quantum(), req.prompt_len)
             self.block_mgr.allocate(req.req_id, first)
+            self.block_mgr.bind_slot(req.req_id, slot)
             self.prefill_pos[slot] = 0
             self.lengths[slot] = 0
             self.slots[slot] = req
@@ -483,6 +609,7 @@ class ContinuousBatchingEngine:
             self.lengths[slot] = req.prompt_len
             self.prefill_pos[slot] = req.prompt_len
             self.block_mgr.allocate(req.req_id, req.prompt_len + 1)
+            self.block_mgr.bind_slot(req.req_id, slot)
             now = self.clock()
             if req.first_token_time is None:
                 req.first_token_time = now
@@ -635,16 +762,21 @@ class ContinuousBatchingEngine:
             starts[i] = self.prefill_pos[i]
             valid[i] = n
         if self.paged:
-            # table built AFTER the extends above so it names this chunk's
-            # freshly allocated pages
+            # table refreshed AFTER the extends above so it names this
+            # chunk's freshly allocated pages
             toks_out, self.cache = self._chunk_fn(
                 self.params, self.cache, jnp.asarray(tokens),
                 jnp.asarray(starts), jnp.asarray(valid),
-                jnp.asarray(self._block_table_array()))
+                self._device_block_table())
         else:
             toks_out, self.cache = self._chunk_fn(
                 self.params, self.cache, jnp.asarray(tokens),
                 jnp.asarray(starts), jnp.asarray(valid))
+        # sync INSIDE the timed region: np.asarray(toks_out) alone only
+        # waits for the token array, leaving the cache update in flight —
+        # prefill_time would otherwise time async dispatch, not compute
+        # (and RWT calibration via profile() would under-report)
+        jax.block_until_ready(self.cache)
         toks_out = np.asarray(toks_out)
         self.stats.prefill_chunks += 1
         now = self.clock()
@@ -675,11 +807,14 @@ class ContinuousBatchingEngine:
             next_tokens, self.cache = self._decode_fn(
                 self.params, self.cache, jnp.asarray(tokens),
                 jnp.asarray(self.lengths),
-                jnp.asarray(self._block_table_array()))
+                self._device_block_table())
         else:
             next_tokens, self.cache = self._decode_fn(
                 self.params, self.cache, jnp.asarray(tokens),
                 jnp.asarray(self.lengths))
+        # sync the cache too (see _prefill_chunk_round): decode_time feeds
+        # the RWT estimator's decode_per_token via profile()
+        jax.block_until_ready(self.cache)
         next_tokens = np.asarray(next_tokens)
         self.stats.decode_iterations += 1
         self.stats.decode_time += time.monotonic() - t0
@@ -707,30 +842,156 @@ class ContinuousBatchingEngine:
                 self.evict_slot(i)
                 req._in_flight = False
 
+    def _plan_burst(self, active: List[int], k: int) -> int:
+        """Largest burst width n <= k whose KV writes are FULLY coverable by
+        the pool right now: each slot needs its allocation extended to
+        ``lengths + min(n, rem) + 1`` tokens (every in-burst write plus the
+        surviving slots' next-step reservation, capped at max_seq_len —
+        a slot that retires at the boundary writes nothing past it).
+        Returns 0 when not even n=2 fits — the caller falls back to the
+        single-step round, whose per-token append/preempt logic owns the
+        pool-exhaustion endgame (vLLM-style preemption parity)."""
+        rem, cur = {}, {}
+        for i in active:
+            r = self.slots[i]
+            rem[i] = min(r.max_new_tokens - r.generated,
+                         self.cfg.max_seq_len - int(self.lengths[i]))
+            cur[i] = len(self.block_mgr.block_table(r.req_id))
+
+        def blocks_short(n: int) -> int:
+            need = 0
+            for i in active:
+                tokens = min(int(self.lengths[i]) + min(n, rem[i]) + 1,
+                             self.cfg.max_seq_len)
+                need += max(self.block_mgr.blocks_needed(tokens) - cur[i], 0)
+            return need
+
+        n = max(k, 0)
+        free = self.block_mgr.free_blocks
+        while n > 1 and blocks_short(n) > free:
+            n -= 1
+        if n <= 1:
+            return 0
+        for i in active:
+            tokens = min(int(self.lengths[i]) + min(n, rem[i]) + 1,
+                         self.cfg.max_seq_len)
+            ok = self.block_mgr.extend(self.slots[i].req_id, tokens)
+            assert ok, (i, tokens)  # blocks_short(n) <= free guarantees it
+        return n
+
+    def _decode_burst_round(self, done: List[Request], k: int) -> None:
+        """Fused decode: one jitted dispatch covering up to ``k`` decode
+        iterations (device-side argmax + finish masks, single host sync),
+        then replay the per-token bookkeeping from the burst's token
+        buffer.  Token-identical to running ``_decode_round`` k times: the
+        per-slot decode depends only on that slot's own cache/lengths, and
+        the finish conditions are evaluated with the same post-increment
+        convention on device and host."""
+        active = self.decode_slots()
+        if not active:
+            return
+        n = self._plan_burst(active, min(k, max(self.cfg.decode_burst, 1)))
+        if n == 0:
+            # pool at the preemption edge: the seed single-step logic owns
+            # OOM preemption ordering
+            self._decode_round(done)
+            return
+        t0 = time.monotonic()
+        tokens = np.zeros(self.cfg.max_slots, np.int32)
+        remaining = np.zeros(self.cfg.max_slots, np.int32)
+        active_mask = np.zeros(self.cfg.max_slots, bool)
+        for i in active:
+            r = self.slots[i]
+            tokens[i] = r.output_tokens[-1] if r.output_tokens \
+                else r.prompt_tokens[-1]
+            remaining[i] = r.max_new_tokens - r.generated
+            active_mask[i] = True
+        bt = self._device_block_table() if self.paged else None
+        out, self.cache = self._burst_fn(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(self.lengths), jnp.asarray(remaining),
+            jnp.asarray(active_mask), jnp.int32(n), bt)
+        jax.block_until_ready(self.cache)
+        out = np.asarray(out)
+        executed = int((out >= 0).any(axis=1).sum())
+        self.stats.decode_iterations += executed
+        self.stats.decode_time += time.monotonic() - t0
+
+        now = self.clock()
+        for i in active:
+            req = self.slots[i]
+            for j in range(executed):
+                tok = int(out[j, i])
+                if tok < 0:
+                    break  # slot went inactive on device at iteration j
+                self.lengths[i] += 1
+                req.output_tokens.append(tok)
+                req.generated += 1
+                self.stats.tokens_generated += 1
+                if req.first_token_time is None:
+                    req.first_token_time = now
+                if self._finish_if_done(i, tok, now, done):
+                    break
+            else:
+                # survived the whole burst: the up-front reservation left
+                # exactly the single-step invariant (lengths + 1 tokens)
+                assert self.block_mgr.seq_tokens(req.req_id) \
+                    == int(self.lengths[i]) + 1
+
+    def _admit_from_pull(self) -> None:
+        """Request pulling: admit while capacity allows; a refused request
+        is handed back to the virtual-queue owner via take_pushback()."""
+        if self.pull_source is None:
+            return
+        while self._pushback is None:
+            if self._free_slot() is None:
+                break
+            req = self.pull_source()
+            if req is None:
+                break
+            if not self.admit(req):
+                self._pushback = req
+                break
+
     def step(self) -> List[Request]:
         """Admit from the pull source, run one prefill chunk round, then one
         decode iteration.  Returns requests completed this step."""
-        # 1. request pulling: admit while capacity allows
-        if self.pull_source is not None:
-            while self._pushback is None:
-                if self._free_slot() is None:
-                    break
-                req = self.pull_source()
-                if req is None:
-                    break
-                if not self.admit(req):
-                    # couldn't admit (KV capacity): hand back to the virtual
-                    # queue owner via take_pushback().
-                    self._pushback = req
-                    break
-
+        self._admit_from_pull()
         # requests that finished inside admit() since the last step are
         # already in self.completed; return them alongside this step's
         done: List[Request] = []
-        # 2. one prefill chunk for every mid-prefill slot (batched)
+        # one prefill chunk for every mid-prefill slot (batched), then a
+        # continuous-batching decode iteration for decode-ready slots
         self._prefill_chunk_round(done)
-        # 3. continuous-batching decode iteration for decode-ready slots
         self._decode_round(done)
+        self.completed.extend(done)
+        admit_done, self._admit_completed = self._admit_completed, []
+        return admit_done + done
+
+    def steps(self, k: Optional[int] = None) -> List[Request]:
+        """Fast-path iteration: like ``step()`` but the decode side runs up
+        to ``k`` iterations (default ``cfg.decode_burst``, which also caps
+        the fused buffer width) in ONE jitted dispatch, syncing to host
+        once per burst instead of once per token.
+
+        Automatic single-step fallback whenever the fused loop can't run
+        soundly at width >= 2: a slot is mid-prefill (the chunk round must
+        interleave with decode at token granularity), or the block pool is
+        at the preemption edge (the single-step append/preempt path owns
+        eviction-LSO ordering).  Pull / evict / swap LSOs act between
+        bursts — external evict_request / swap_model calls bump the block
+        table version, so the next dispatch sees a fresh device table.
+        Token-identical to the ``step()`` loop on every backend."""
+        k = self.cfg.decode_burst if k is None else k
+        if k <= 1:
+            return self.step()
+        self._admit_from_pull()
+        done: List[Request] = []
+        if self.prefilling_slots():
+            self._prefill_chunk_round(done)
+            self._decode_round(done)
+        else:
+            self._decode_burst_round(done, k)
         self.completed.extend(done)
         admit_done, self._admit_completed = self._admit_completed, []
         return admit_done + done
@@ -756,7 +1017,16 @@ class ContinuousBatchingEngine:
                 break
         n_admitted = self.num_active()
         while self.num_active() > 0:
-            self.step()
+            # steps() so calibration measures the engine's configured
+            # operating mode: burst engines amortize dispatch across the
+            # burst, and decode_per_token must reflect that (burst 1 ==
+            # the plain step() loop)
+            self.steps()
+        # the timed regions inside the rounds block_until_ready the step
+        # outputs (cache included), so the phase stats below measure real
+        # compute, not async dispatch; this final sync is belt-and-braces
+        # for any admit-path work still in flight
+        jax.block_until_ready(self.cache)
         prefill_t = s.prefill_time - pf0
         decode_t = s.decode_time - dt0
         iters = s.decode_iterations - it0

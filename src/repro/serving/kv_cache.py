@@ -11,11 +11,21 @@ KV lives in per-slot ``(B, KVH, S, D)`` arrays); under the paged backends
 (``attention_backend="paged-*"``) each id names a PHYSICAL page of the
 global pool ``(num_blocks, KVH, block_size, D)`` — freeing a sequence
 makes its HBM immediately reusable by any other sequence.
+
+The manager can additionally maintain an **incremental slot table**
+(``attach_slot_table``): a persistent fixed-shape ``(rows, width)`` int32
+array mapping engine slots to physical page ids, updated in place by every
+allocate/extend/append_token/free instead of being rebuilt O(rows x width)
+in Python each engine iteration.  ``table_version`` bumps on every table
+mutation so the engine refreshes its device copy only when something
+actually changed.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Optional
+
+import numpy as np
 
 
 class OutOfBlocksError(RuntimeError):
@@ -38,6 +48,65 @@ class BlockManager:
         self.watermark_blocks = max(1, int(num_blocks * watermark))
         self._free: List[int] = list(range(num_blocks))
         self._seqs: Dict[int, SeqAlloc] = {}
+        # incremental slot table (attach_slot_table): row per engine slot,
+        # sentinel num_blocks for unallocated logical blocks / unbound rows
+        self._table: Optional[np.ndarray] = None
+        self._seq_rows: Dict[int, int] = {}
+        self.table_version = 0
+
+    # ------------------------------------------------------------------
+    # incremental slot table
+    # ------------------------------------------------------------------
+    def attach_slot_table(self, rows: int, width: int) -> None:
+        """Maintain a persistent ``(rows, width)`` int32 slot -> physical
+        page table.  Row ``r`` mirrors the block table of the sequence bound
+        to it via ``bind_slot``; unbound rows and unallocated logical blocks
+        hold the sentinel ``num_blocks`` (writes dropped, reads masked).
+        Every subsequent allocate/extend/append_token/free updates the table
+        in place — O(new blocks) instead of an O(rows x width) rebuild."""
+        self._table = np.full((rows, width), self.num_blocks, np.int32)
+        self._seq_rows.clear()
+        self.table_version += 1
+
+    def bind_slot(self, seq_id: int, row: int) -> None:
+        """Bind an allocated sequence to a table row (engine slot) and
+        populate the row from its current block table."""
+        if self._table is None:
+            return
+        assert seq_id in self._seqs, seq_id
+        self._seq_rows[seq_id] = row
+        blocks = self._seqs[seq_id].block_table
+        assert len(blocks) <= self._table.shape[1], \
+            (len(blocks), self._table.shape)
+        self._table[row, :len(blocks)] = blocks
+        self._table[row, len(blocks):] = self.num_blocks
+        self.table_version += 1
+
+    def _table_append(self, seq_id: int, new_blocks: List[int],
+                      start: int) -> None:
+        """Record blocks just appended to ``seq_id``'s block table at
+        logical positions [start, start + len(new_blocks))."""
+        if self._table is None or not new_blocks:
+            return
+        row = self._seq_rows.get(seq_id)
+        if row is None:
+            return
+        assert start + len(new_blocks) <= self._table.shape[1], \
+            (start, len(new_blocks), self._table.shape)
+        self._table[row, start:start + len(new_blocks)] = new_blocks
+        self.table_version += 1
+
+    def _table_clear(self, seq_id: int) -> None:
+        row = self._seq_rows.pop(seq_id, None)
+        if self._table is not None and row is not None:
+            self._table[row, :] = self.num_blocks
+            self.table_version += 1
+
+    def slot_table(self) -> Optional[np.ndarray]:
+        """The incrementally-maintained table (None until attached).  The
+        caller must treat it as read-only; it is mutated in place by the
+        allocation state machine."""
+        return self._table
 
     # ------------------------------------------------------------------
     @property
@@ -106,9 +175,11 @@ class BlockManager:
         need = self.blocks_needed(num_tokens) - len(alloc.block_table)
         if need > len(self._free):
             return False
+        start = len(alloc.block_table)
         for _ in range(need):
             alloc.block_table.append(self._free.pop())
         alloc.num_tokens = num_tokens
+        self._table_append(seq_id, alloc.block_table[start:], start)
         return True
 
     def append_token(self, seq_id: int) -> bool:
@@ -119,6 +190,8 @@ class BlockManager:
             if not self._free:
                 return False
             alloc.block_table.append(self._free.pop())
+            self._table_append(seq_id, alloc.block_table[-1:],
+                               len(alloc.block_table) - 1)
         alloc.num_tokens += 1
         return True
 
@@ -126,6 +199,7 @@ class BlockManager:
         alloc = self._seqs.pop(seq_id, None)
         if alloc is not None:
             self._free.extend(alloc.block_table)
+            self._table_clear(seq_id)
 
     def block_table(self, seq_id: int) -> List[int]:
         return list(self._seqs[seq_id].block_table)
@@ -139,3 +213,7 @@ class BlockManager:
     def reset(self) -> None:
         self._free = list(range(self.num_blocks))
         self._seqs.clear()
+        self._seq_rows.clear()
+        if self._table is not None:
+            self._table[:] = self.num_blocks
+        self.table_version += 1

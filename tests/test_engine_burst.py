@@ -1,0 +1,258 @@
+"""Fused multi-step decode dispatch (``EngineConfig.decode_burst``).
+
+The acceptance bar: for every attention backend, driving the engine with
+``steps()`` at burst widths 1 / 4 / 16 produces tokens IDENTICAL to the
+seed single-step ``step()`` loop — including a mid-burst EOS (finish flag
+raised inside the fused loop), a mid-burst KV-pool exhaustion (preemption
++ snapshot resume), and donation on/off.  Also locks the incremental
+block-table invariant: ``BlockManager.slot_table()`` always equals the
+from-scratch ``_block_table_array()`` rebuild.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHITECTURES
+from repro.core.request import Request
+from repro.models import build_model
+from repro.serving import ContinuousBatchingEngine, EngineConfig
+
+BACKENDS = ("xla", "pallas", "paged-xla", "paged-pallas")
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = ARCHITECTURES["granite-3-2b"].reduced(num_layers=1, d_model=64)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _mk_engine(model, params, **kw):
+    cfg = EngineConfig(**{"max_slots": 4, "max_seq_len": 64,
+                          "prefill_chunk_tokens": 16, "block_size": 8, **kw})
+    return ContinuousBatchingEngine(model, params, cfg, model_name="m1")
+
+
+def _req(prompt, n=8):
+    return Request(prompt_tokens=list(prompt), model="m1", slo=1e9,
+                   max_new_tokens=n)
+
+
+def _drive(eng, reqs, max_iters=300):
+    """steps() (burst when configured) until every request finishes,
+    re-admitting preempted requests as capacity frees up — and assert the
+    incremental table matches the from-scratch rebuild each iteration."""
+    for _ in range(max_iters):
+        eng.steps()
+        if eng.cfg.incremental_block_table:
+            np.testing.assert_array_equal(eng.block_mgr.slot_table(),
+                                          eng._block_table_array())
+        for r in reqs:
+            if not r.finished() and r.snapshot is not None \
+                    and not any(s is r for s in eng.slots):
+                if eng.can_admit(r):
+                    assert eng.admit(r)
+        if all(r.finished() for r in reqs):
+            return [r.output_tokens for r in reqs]
+    raise AssertionError("requests did not finish")
+
+
+# ---------------------------------------------------------------------------
+# token parity across burst widths x backends (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_burst_token_parity_all_backends(small_model, backend):
+    _, model, params = small_model
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 100, size=n).tolist() for n in (3, 17, 30, 9)]
+
+    # seed behavior: single-step loop, no donation, rebuilt tables
+    base = _mk_engine(model, params, attention_backend=backend,
+                      decode_burst=1, donate_buffers=False,
+                      incremental_block_table=False)
+    base_reqs = [_req(p) for p in prompts]
+    for r in base_reqs:
+        assert base.admit(r)
+    want = _drive(base, base_reqs)
+    assert all(len(t) == 8 for t in want)
+
+    for burst in (4, 16):
+        eng = _mk_engine(model, params, attention_backend=backend,
+                         decode_burst=burst)
+        reqs = [_req(p) for p in prompts]
+        for r in reqs:
+            assert eng.admit(r)
+        got = _drive(eng, reqs)
+        assert got == want, (backend, burst)
+        assert eng.block_mgr.used_blocks == 0
+        # the fused loop really ran multi-step dispatches: same iteration
+        # count, strictly fewer device round-trips than iterations
+        assert eng.stats.decode_iterations == base.stats.decode_iterations
+
+
+def test_burst_with_mixed_admissions_interleaves_prefill(small_model):
+    """steps() falls back to single-step while any slot is mid-prefill and
+    bursts once prefill drains — tokens identical to the step() loop when
+    admissions arrive mid-serve through a pull source."""
+    _, model, params = small_model
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, 100, size=n).tolist() for n in (25, 4, 18)]
+
+    def run(burst):
+        eng = _mk_engine(model, params, attention_backend="paged-xla",
+                         decode_burst=burst, max_slots=2)
+        queue = [_req(p, n=6) for p in prompts]
+        reqs = list(queue)
+        eng.pull_source = lambda: queue.pop(0) if queue else None
+        for _ in range(300):
+            eng.steps()
+            back = eng.take_pushback()
+            if back is not None:
+                queue.insert(0, back)
+                back._in_flight = False
+            if all(r.finished() for r in reqs):
+                return [r.output_tokens for r in reqs]
+        raise AssertionError("did not finish")
+
+    assert run(4) == run(1)
+
+
+# ---------------------------------------------------------------------------
+# mid-burst EOS / mid-burst OOM
+# ---------------------------------------------------------------------------
+
+def test_mid_burst_eos_finish(small_model):
+    """An EOS raised INSIDE a burst must retire the slot at the same token
+    as the single-step loop (the remaining fused iterations mask it)."""
+    _, model, params = small_model
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, 100, size=n).tolist() for n in (5, 12)]
+
+    probe = _mk_engine(model, params, attention_backend="xla")
+    probe_reqs = [_req(p, n=16) for p in prompts]
+    for r in probe_reqs:
+        assert probe.admit(r)
+    _drive(probe, probe_reqs)
+    # an eos that fires mid-stream (not on the first token, inside the
+    # first burst of 8) for at least one request
+    eos = probe_reqs[0].output_tokens[2]
+
+    def run(backend, burst):
+        eng = _mk_engine(model, params, attention_backend=backend,
+                         decode_burst=burst, eos_token=eos)
+        reqs = [_req(p, n=16) for p in prompts]
+        for r in reqs:
+            assert eng.admit(r)
+        return _drive(eng, reqs)
+
+    for backend in ("xla", "paged-xla"):
+        want = run(backend, 1)
+        assert any(t[-1] == eos and len(t) < 16 for t in want)  # fired early
+        assert run(backend, 8) == want
+
+
+def test_mid_burst_oom_preempts_and_resumes(small_model):
+    """A burst that would overrun the block pool shrinks / falls back to the
+    single-step preemption path; the preempted request resumes from its
+    snapshot and the final tokens match an uncontended run."""
+    _, model, params = small_model
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, 100, size=12).tolist() for _ in range(2)]
+
+    # uncontended reference: big pool, no preemption possible
+    ref_eng = _mk_engine(model, params, attention_backend="paged-xla",
+                         decode_burst=4)
+    ref_reqs = [_req(p, n=24) for p in prompts]
+    for r in ref_reqs:
+        assert ref_eng.admit(r)
+    want = _drive(ref_eng, ref_reqs)
+    assert ref_eng.stats.preemptions == 0
+
+    # starved pool: 8 blocks * 8 = 64 tokens for 2 requests needing
+    # (12 + 24 + 1) tokens each -> decode must exhaust the pool mid-serve
+    eng = _mk_engine(model, params, attention_backend="paged-xla",
+                     decode_burst=4, kv_blocks=8, max_seq_len=40)
+    reqs = [_req(p, n=24) for p in prompts]
+    for r in reqs:
+        assert eng.admit(r)
+    got = _drive(eng, reqs)
+    assert eng.stats.preemptions >= 1          # OOM fired mid-serve
+    assert eng.stats.resumes >= 1              # ...and resumed from snapshot
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# donation + incremental table
+# ---------------------------------------------------------------------------
+
+def test_donation_toggle_token_parity(small_model):
+    """donate_buffers only changes buffer lifetimes, never tokens — and the
+    donated engine's old cache buffers really are consumed."""
+    _, model, params = small_model
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, 100, size=n).tolist() for n in (3, 20)]
+
+    outs = {}
+    for donate in (True, False):
+        eng = _mk_engine(model, params, attention_backend="paged-xla",
+                         donate_buffers=donate, max_slots=2)
+        reqs = [_req(p, n=6) for p in prompts]
+        for r in reqs:
+            assert eng.admit(r)
+        if donate:
+            cache_before = eng.cache
+        _drive(eng, reqs)
+        if donate:
+            leaf = jax.tree.leaves(cache_before)[0]
+            with pytest.raises((RuntimeError, ValueError)):
+                np.asarray(leaf)  # donated into the first dispatch
+        outs[donate] = [r.output_tokens for r in reqs]
+    assert outs[True] == outs[False]
+
+
+def test_quant_burst_parity(small_model):
+    """int8 KV pools burst token-identically (fused-dequant kernels inside
+    the lax loop)."""
+    cfg = dataclasses.replace(
+        ARCHITECTURES["granite-3-2b"].reduced(num_layers=1, d_model=64),
+        kv_quant=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(1))
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, 100, size=n).tolist() for n in (5, 21)]
+
+    def run(burst):
+        eng = _mk_engine(model, params, attention_backend="paged-xla",
+                         decode_burst=burst, max_slots=2)
+        reqs = [_req(p, n=5) for p in prompts]
+        for r in reqs:
+            assert eng.admit(r)
+        return _drive(eng, reqs)
+
+    assert run(4) == run(1)
+
+
+def test_block_table_version_only_bumps_on_change(small_model):
+    """The device block-table upload is refreshed only when the manager's
+    table actually changed: a decode burst that stays inside already-
+    reserved blocks must reuse the same device array."""
+    _, model, params = small_model
+    eng = _mk_engine(model, params, attention_backend="paged-xla",
+                     decode_burst=1)
+    r = _req(list(range(3)), n=12)
+    assert eng.admit(r)
+    while eng.prefilling_slots():
+        eng.step()
+    bt1 = eng._device_block_table()
+    bt2 = eng._device_block_table()
+    assert bt1 is bt2                       # no mutation -> cached upload
+    v = eng.block_mgr.table_version
+    eng.step()                              # append_token may extend a block
+    if eng.block_mgr.table_version == v:
+        assert eng._device_block_table() is bt1
+    else:
+        assert eng._device_block_table() is not bt1

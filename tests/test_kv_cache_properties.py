@@ -1,7 +1,9 @@
 """BlockManager property tests: random allocate/extend/append_token/free
 interleavings never double-assign a block and always conserve
 ``free_blocks + used_blocks == num_blocks`` (the invariants the paged KV
-pool's physical page reuse depends on)."""
+pool's physical page reuse depends on) — and the incrementally-maintained
+slot table always equals a from-scratch rebuild."""
+import numpy as np
 import pytest
 pytest.importorskip("hypothesis")  # optional dep: property tests only
 from hypothesis import given, settings, strategies as st
@@ -44,6 +46,61 @@ def test_accounting_invariants(ops):
         elif op == "free":
             bm.free(sid)
         _check_invariants(bm)
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "extend", "append",
+                                           "free", "reset"]),
+                          st.integers(0, 7), st.integers(1, 40)),
+                max_size=80))
+def test_incremental_slot_table_matches_rebuild(ops):
+    """The table BlockManager maintains in place on every
+    allocate/extend/append_token/free (the engine's hot-loop block table)
+    is always identical to rebuilding it from the per-sequence block
+    tables — the invariant _device_block_table's version-gated upload
+    relies on."""
+    rows, width, bs = 8, 16, 4
+    bm = BlockManager(num_blocks=24, block_size=bs)
+    bm.attach_slot_table(rows, width)
+    cap = width * bs                       # engine-enforced per-seq bound
+    free_rows = set(range(rows))
+    row_of = {}
+    for op, sid, ntok in ops:
+        version = bm.table_version
+        mutated = False  # ops below that MUST bump the version
+        if op == "alloc" and not bm.has(sid) and free_rows:
+            if bm.can_allocate(min(ntok, cap)):
+                bm.allocate(sid, min(ntok, cap))
+                row_of[sid] = free_rows.pop()
+                bm.bind_slot(sid, row_of[sid])
+                mutated = True
+        elif op == "extend" and bm.has(sid):
+            before = len(bm.block_table(sid))
+            bm.extend(sid, min(ntok, cap))
+            mutated = len(bm.block_table(sid)) > before
+        elif op == "append" and bm.has(sid) and bm.seq_tokens(sid) < cap:
+            before = len(bm.block_table(sid))
+            bm.append_token(sid)
+            mutated = len(bm.block_table(sid)) > before
+        elif op == "free" and bm.has(sid):
+            bm.free(sid)
+            free_rows.add(row_of.pop(sid))
+            mutated = True
+        elif op == "reset":
+            bm.reset()
+            free_rows = set(range(rows))
+            row_of.clear()
+            mutated = True
+        want = np.full((rows, width), bm.num_blocks, np.int32)
+        for s, r in row_of.items():
+            blocks = bm.block_table(s)
+            want[r, :len(blocks)] = blocks
+        np.testing.assert_array_equal(bm.slot_table(), want)
+        # a mutation that stopped bumping the version would make
+        # _device_block_table serve a STALE device table — every
+        # table-changing op above must move the counter
+        if mutated:
+            assert bm.table_version > version
 
 
 @settings(max_examples=40, deadline=None)
