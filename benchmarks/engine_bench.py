@@ -13,6 +13,13 @@ variants:
                           dispatch (``EngineConfig.decode_burst``);
   * ``burst4_undonated``— burst without donation (isolates the two wins).
 
+Plus a **prefix-sharing scenario** (paged backends): N requests sharing a
+75%-length common prompt prefix served with ``EngineConfig.prefix_sharing``
+on vs off — emitted as ``prefix_sharing`` rows carrying the prefix hit
+rate, the pool blocks saved during the prompt phase (1 shared chain + N
+private tails vs N full chains), and a token-parity bit (the streams must
+be identical in both modes).
+
 Per row: decode ``steps/sec`` over a measured run of ``steps()`` calls,
 the median wall time of the raw jitted dispatch for the same shapes
 (``jit_us_per_iter``), and the derived ``host_overhead_fraction``
@@ -57,12 +64,13 @@ def _build(arch, num_layers, d_model):
 
 
 def _mk_engine(model, params, *, backend, batch, burst, donate, incremental,
-               max_seq):
+               max_seq, prefix_sharing=True):
     from repro.serving import ContinuousBatchingEngine, EngineConfig
     cfg = EngineConfig(max_slots=batch, max_seq_len=max_seq, block_size=8,
                        prefill_chunk_tokens=16, attention_backend=backend,
                        decode_burst=burst, donate_buffers=donate,
-                       incremental_block_table=incremental)
+                       incremental_block_table=incremental,
+                       prefix_sharing=prefix_sharing)
     return ContinuousBatchingEngine(model, params, cfg, model_name="bench")
 
 
@@ -154,6 +162,60 @@ def bench_variant(model, params, *, backend, batch, label, burst, donate,
     }
 
 
+def bench_prefix_sharing(model, params, *, backend, batch=8, prompt_len=32,
+                         shared_frac=0.75, max_new=8):
+    """N requests sharing a ``shared_frac`` common prompt prefix, served
+    with prefix sharing on vs off: hit rate, prompt-phase pool blocks
+    saved, COW copies, and a token-parity check."""
+    from repro.core.request import Request
+    rng = np.random.default_rng(11)
+    shared_len = int(prompt_len * shared_frac)
+    common = rng.integers(0, 100, size=shared_len).tolist()
+    prompts = [common + rng.integers(0, 100,
+                                     size=prompt_len - shared_len).tolist()
+               for _ in range(batch)]
+
+    def serve(sharing):
+        eng = _mk_engine(model, params, backend=backend, batch=batch,
+                         burst=1, donate=True, incremental=True,
+                         max_seq=prompt_len + max_new + 8,
+                         prefix_sharing=sharing)
+        reqs = [Request(prompt_tokens=p, model="bench", slo=1e9,
+                        max_new_tokens=max_new) for p in prompts]
+        # leader first: followers match the blocks its chunks publish
+        assert eng.admit(reqs[0])
+        while eng.prefilling_slots():
+            eng.step()
+        for r in reqs[1:]:
+            assert eng.admit(r)
+        while eng.prefilling_slots():
+            eng.step()
+        prompt_blocks = eng.block_mgr.used_blocks
+        for _ in range(10 * max_new):
+            eng.step()
+            if all(r.finished() for r in reqs):
+                break
+        assert all(r.finished() for r in reqs)
+        assert eng.block_mgr.used_blocks == 0
+        return [r.output_tokens for r in reqs], prompt_blocks, eng.stats
+
+    tokens_on, blocks_on, stats = serve(True)
+    tokens_off, blocks_off, _ = serve(False)
+    denom = max(stats.prompt_tokens_admitted, 1)
+    return {
+        "backend": backend, "batch": batch, "prompt_len": prompt_len,
+        "shared_prefix_len": shared_len,
+        "prefix_hits": stats.prefix_hits,
+        "prefix_hit_rate": round(stats.prefix_shared_tokens / denom, 4),
+        "prefix_shared_blocks": stats.prefix_shared_blocks,
+        "prompt_pool_blocks_sharing": blocks_on,
+        "prompt_pool_blocks_baseline": blocks_off,
+        "blocks_saved": blocks_off - blocks_on,
+        "cow_copies": stats.cow_copies,
+        "tokens_match": tokens_on == tokens_off,
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -168,12 +230,14 @@ def main() -> None:
         num_layers, d_model = 1, 64
         iters = args.iters or 16
         variants = [v for v in VARIANTS if v[0] != "burst16"]
+        sharing_backends = ["paged-pallas"]
     else:
         backends = ["xla", "pallas", "paged-xla", "paged-pallas"]
         batches = [1, 4, 8]
         num_layers, d_model = 2, 128
         iters = args.iters or 32
         variants = list(VARIANTS)
+        sharing_backends = ["paged-xla", "paged-pallas"]
 
     model, params = _build("granite-3-2b", num_layers, d_model)
     max_seq = 16 + iters + 16 * 4 + 32  # prompt + run + burst slack
@@ -191,6 +255,18 @@ def main() -> None:
                 print(f"{backend:>12} b={batch} {label:>16}: "
                       f"{row['steps_per_sec']:>8.1f} steps/s  "
                       f"host-overhead {row['host_overhead_fraction']:.0%}")
+
+    # shared-prompt scenario (paged backends; 8 x 75%-shared prefixes)
+    sharing_rows = []
+    for backend in sharing_backends:
+        row = bench_prefix_sharing(model, params, backend=backend)
+        sharing_rows.append(row)
+        print(f"{backend:>12} prefix-sharing: hit-rate "
+              f"{row['prefix_hit_rate']:.0%}, blocks "
+              f"{row['prompt_pool_blocks_baseline']} -> "
+              f"{row['prompt_pool_blocks_sharing']} "
+              f"(saved {row['blocks_saved']}), tokens_match="
+              f"{row['tokens_match']}")
 
     # seed-vs-optimized summary per (backend, batch)
     summary = []
@@ -223,6 +299,7 @@ def main() -> None:
             "wall_seconds": 0.0,
         },
         "engine": rows,
+        "prefix_sharing": sharing_rows,
         "summary": summary,
     }
     result["meta"]["wall_seconds"] = round(time.time() - t_start, 1)

@@ -49,6 +49,11 @@ class Request:
     extras: Any = None
     # ground-truth output length (simulator only; unknown to the scheduler)
     true_output_tokens: Optional[int] = None
+    # prompt tokens served from the shared-prefix KV cache instead of
+    # prefill.  The real engine fills it at admission (observability); the
+    # simulator consumes it as ground truth — like true_output_tokens —
+    # to skip prefill work / KV for the shared leading run.
+    prefix_shared_tokens: int = 0
     # scheduling flag: currently in a running batch
     _in_flight: bool = False
     # chunked-prefill progress kept across evictions (simulator mirror of

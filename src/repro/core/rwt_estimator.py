@@ -66,6 +66,24 @@ class HardwareProfile:
     # simulator and the RWT prefill term charge the SAME per-model chunk
     # counts instead of one approximate quantum per policy.
     sliding_window: Optional[int] = None
+    # Fused multi-step decode width of the serving instance
+    # (EngineConfig.decode_burst): the engine dispatches up to this many
+    # decode iterations per host round-trip, so the per-dispatch host
+    # overhead below amortizes across the burst instead of being charged
+    # per token.
+    decode_burst: int = 1
+    # Host + dispatch seconds per fused decode dispatch (the
+    # host_overhead_fraction engine_bench.py measures, in absolute terms).
+    # 0 folds it into decode_per_token (the pre-burst reading).
+    dispatch_overhead: float = 0.0
+
+    def decode_seconds(self, burst: Optional[int] = None) -> float:
+        """Effective seconds per decode ITERATION: pure per-token compute
+        ``d`` plus the per-dispatch host overhead amortized over the burst
+        width (``burst`` overrides ``self.decode_burst``; chunk-interleaved
+        iterations run single-step, so they pass 1)."""
+        b = max(burst if burst is not None else self.decode_burst, 1)
+        return self.decode_per_token + self.dispatch_overhead / b
 
     def chunk_quantum(self, quantum: Optional[int] = None) -> Optional[int]:
         """Effective per-model chunked-prefill quantum (mirrors the
@@ -82,21 +100,33 @@ class HardwareProfile:
             return min(c, self.sliding_window)
         return c
 
-    def prefill_seconds(self, prompt_tokens: Optional[float] = None) -> float:
+    def prefill_seconds(self, prompt_tokens: Optional[float] = None,
+                        effective_prompt_tokens: Optional[float] = None) -> float:
         """Prefill term P for one request.
 
         Without ``prompt_tokens`` this is the paper's constant P.  With it,
         P scales per-1k-prompt-tokens (matching the simulator's accounting)
         and, when the instance prefills in chunks, adds one interleaved
         decode iteration per chunk (window-clamped via ``chunk_quantum``).
+
+        ``effective_prompt_tokens`` is the portion that actually runs
+        prefill compute once shared-prefix KV cache hits are subtracted
+        (engine: chunked prefill starts at the first unshared token) — the
+        rate AND the chunk count both scale with it, so waiting-time
+        estimates reflect cache hits.  Defaults to ``prompt_tokens``
+        (no sharing).  Chunk-interleaved decode iterations dispatch
+        single-step, hence ``decode_seconds(burst=1)``.
         """
         if prompt_tokens is None:
             return self.prefill_time
-        t = self.prefill_time * (prompt_tokens / 1024.0)
+        eff = effective_prompt_tokens if effective_prompt_tokens is not None \
+            else prompt_tokens
+        eff = min(max(eff, 0.0), prompt_tokens)
+        t = self.prefill_time * (eff / 1024.0)
         chunk = self.chunk_quantum()
         if chunk:
-            n_chunks = math.ceil(max(prompt_tokens, 1.0) / chunk)
-            t += n_chunks * self.decode_per_token
+            n_chunks = math.ceil(max(eff, 1.0) / chunk)
+            t += n_chunks * self.decode_seconds(burst=1)
         return t
 
     def batch_size(self, wl: WorkloadProfile) -> float:
@@ -104,8 +134,9 @@ class HardwareProfile:
         return self.token_capacity / max(wl.mu_input + wl.mu_output, 1.0)
 
     def throughput(self, wl: WorkloadProfile) -> float:
-        """Eq. 15: Θ = B / (d · ε) output tokens per second."""
-        return self.batch_size(wl) / (self.decode_per_token * self.inefficiency)
+        """Eq. 15: Θ = B / (d · ε) output tokens per second, with d the
+        burst-amortized per-iteration cost (``decode_seconds``)."""
+        return self.batch_size(wl) / (self.decode_seconds() * self.inefficiency)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,43 +167,58 @@ class RWTEstimator:
     def decode_time(self, hw: HardwareProfile,
                     max_output_tokens: Optional[int] = None) -> float:
         o = max_output_tokens if max_output_tokens is not None else hw.model_max_tokens
-        return o * hw.inefficiency * hw.decode_per_token
+        return o * hw.inefficiency * hw.decode_seconds()
 
     # -- Eq. 1/5: completion bound for a request / group ------------------
     def request_completion(self, queue_position: int, wl: WorkloadProfile,
                            hw: HardwareProfile,
                            max_output_tokens: Optional[int] = None,
-                           prompt_tokens: Optional[float] = None) -> WaitEstimate:
+                           prompt_tokens: Optional[float] = None,
+                           effective_prompt_tokens: Optional[float] = None
+                           ) -> WaitEstimate:
         """Eq. 1/5.  ``prompt_tokens`` (e.g. ``wl.mu_input``) switches the
         prefill term from the constant P to the token-scaled,
-        chunk-interleaving-aware estimate (``hw.prefill_seconds``)."""
+        chunk-interleaving-aware estimate (``hw.prefill_seconds``);
+        ``effective_prompt_tokens`` further subtracts shared-prefix cache
+        hits from the prefill work (engine skips prefill for cached full
+        blocks)."""
         w = self.waiting_time(queue_position, wl, hw)
-        extra = hw.prefill_seconds(prompt_tokens) \
+        extra = hw.prefill_seconds(prompt_tokens, effective_prompt_tokens) \
             + self.decode_time(hw, max_output_tokens)
         return WaitEstimate(w.mean + extra, w.std)
 
     def group_drain_time(self, n_requests: int, wl: WorkloadProfile,
                          hw: HardwareProfile,
-                         prompt_tokens: Optional[float] = None) -> WaitEstimate:
+                         prompt_tokens: Optional[float] = None,
+                         effective_prompt_tokens: Optional[float] = None
+                         ) -> WaitEstimate:
         """Eq. 5 over a whole request group: the LAST request's completion.
 
         The group's total output tokens ~ N(nμ_o, nσ_o²); drain = tokens/Θ,
         plus the conservative tail decode for the final request.
         ``prompt_tokens`` (the group's μ_input) makes the prefill term
-        token-scaled and chunk-interleaving-aware (``hw.prefill_seconds``).
+        token-scaled and chunk-interleaving-aware (``hw.prefill_seconds``);
+        ``effective_prompt_tokens`` (the group's μ_input net of expected
+        prefix-cache hits — request groups share prompt templates, so the
+        hit rate is per-group) shrinks it accordingly.
         """
         theta = hw.throughput(wl)
         mean = n_requests * wl.mu_output / theta
         std = math.sqrt(max(n_requests, 1)) * wl.sigma_output / theta
-        return WaitEstimate(mean + hw.prefill_seconds(prompt_tokens), std)
+        return WaitEstimate(
+            mean + hw.prefill_seconds(prompt_tokens, effective_prompt_tokens),
+            std)
 
     def group_first_token_time(self, n_ahead_tokens: float,
                                wl: WorkloadProfile, hw: HardwareProfile,
-                               prompt_tokens: Optional[float] = None) -> float:
+                               prompt_tokens: Optional[float] = None,
+                               effective_prompt_tokens: Optional[float] = None
+                               ) -> float:
         """TTFT for a group whose predecessors hold ``n_ahead_tokens``
         pending output tokens (used by the violation monitor)."""
         theta = hw.throughput(wl)
-        return n_ahead_tokens / theta + hw.prefill_seconds(prompt_tokens)
+        return n_ahead_tokens / theta \
+            + hw.prefill_seconds(prompt_tokens, effective_prompt_tokens)
 
     # -- accuracy metric (Fig. 18) ----------------------------------------
     @staticmethod

@@ -39,6 +39,17 @@ def main(argv=None) -> dict:
                     help="fused decode iterations per engine dispatch "
                          "(QLMAgent.run_iteration drives steps(); 1 = the "
                          "single-step loop)")
+    ap.add_argument("--backend", default=None,
+                    choices=[None, "xla", "pallas", "paged-xla",
+                             "paged-pallas"],
+                    help="serving attention backend (None follows the "
+                         "model config; prefix sharing needs a paged-* "
+                         "backend's physical page pool)")
+    ap.add_argument("--prefix-sharing", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="refcounted shared-prefix KV pages on the paged "
+                         "backends (--no-prefix-sharing for the A/B "
+                         "baseline; inert on dense backends)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -55,7 +66,9 @@ def main(argv=None) -> dict:
 
     engines, agents, infos = [], [], []
     ecfg = EngineConfig(max_slots=args.slots, max_seq_len=128,
-                        decode_burst=args.decode_burst)
+                        decode_burst=args.decode_burst,
+                        attention_backend=args.backend,
+                        prefix_sharing=args.prefix_sharing)
     for i in range(args.instances):
         m0, p0 = registry[arch_names[0]]
         eng = ContinuousBatchingEngine(m0, p0, ecfg, model_name=arch_names[0])
@@ -107,6 +120,9 @@ def main(argv=None) -> dict:
         "evictions": sum(e.stats.evictions for e in engines),
         "swaps": sum(e.stats.model_swaps for e in engines),
         "tokens": sum(e.stats.tokens_generated for e in engines),
+        "prefix_hits": sum(e.stats.prefix_hits for e in engines),
+        "prefix_shared_tokens": sum(e.stats.prefix_shared_tokens
+                                    for e in engines),
     }
     for k, v in stats.items():
         print(f"{k:18s} {v:.3f}" if isinstance(v, float) else f"{k:18s} {v}")

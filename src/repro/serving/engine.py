@@ -64,6 +64,22 @@ Backend support matrix (rows = engine capabilities; see
     whole burst are reserved up front, so a burst can never write an
     unallocated page; completion timestamps within a burst collapse to
     the burst's host sync).
+  * **prefix sharing** (``EngineConfig.prefix_sharing``, default on) is a
+    paged-backend capability — dense per-slot KV has no physical pages to
+    share, so the flag is inert on "xla"/"pallas".  On the paged backends
+    admission matches the incoming prompt against the ``BlockManager``
+    prefix index (full blocks published as their chunks complete) and
+    attaches the hit chain refcounted instead of re-prefilling it:
+    chunked prefill starts at the first unshared token, page writes only
+    ever target private blocks (copy-on-write peels a shared tail block
+    before any divergent write — ``_apply_cow`` runs the pending page
+    copies before every dispatch), eviction pins shared blocks instead of
+    freeing or copying them (snapshots hold only privately-owned pages),
+    and ``fork_slot`` clones a running decode onto a free slot with zero
+    page copies.  Token-for-token identical to ``prefix_sharing=False``
+    on every backend; a pinned (shared) snapshot resumes only on the
+    engine that evicted it — cross-engine mid-decode migration of a
+    shared sequence raises, like cross-layout resume.
 
 Dense cache pytrees have layout (layers/sites, batch, ...), so slot insert
 / extract are uniform ``tree_map``s over axis 1; paged caches have no
@@ -126,6 +142,13 @@ class EngineConfig:
     # instead of rebuilding it in Python twice per step.  Off only for A/B
     # benchmarking against the seed behavior.
     incremental_block_table: bool = True
+    # Refcounted prefix sharing + copy-on-write pages (paged backends only;
+    # inert on the dense layouts, which have no physical pages to share).
+    # Admission matches prompts against the BlockManager prefix index and
+    # skips prefill for cached full blocks.  Off for A/B comparison — token
+    # streams are identical either way, only pool usage / prefill work and
+    # the prefix_* stats change.
+    prefix_sharing: bool = True
 
     @property
     def paged(self) -> bool:
@@ -174,6 +197,14 @@ class EngineStats:
     decode_time: float = 0.0
     prefill_time: float = 0.0
     swap_time: float = 0.0
+    # prefix sharing (paged backends with EngineConfig.prefix_sharing)
+    prefix_lookups: int = 0        # fresh chunked admissions that probed
+    prefix_hits: int = 0           # ... and attached a shared chain
+    prefix_shared_blocks: int = 0  # blocks attached without re-prefill
+    prefix_shared_tokens: int = 0  # prompt tokens skipped by prefill
+    prompt_tokens_admitted: int = 0  # denominator for the hit-rate counters
+    cow_copies: int = 0            # copy-on-write page copies applied
+    forks: int = 0                 # fork_slot clones
 
 
 class ContinuousBatchingEngine:
@@ -187,6 +218,8 @@ class ContinuousBatchingEngine:
         self.cfg = cfg
         self.clock = clock
         self.paged = cfg.paged
+        # sharing needs a physical page pool: inert on the dense layouts
+        self.prefix_sharing = bool(cfg.prefix_sharing) and self.paged
         self.model = self._with_backend(model)
         self.params = params
         self.model_name = model_name
@@ -222,6 +255,11 @@ class ContinuousBatchingEngine:
         self.cache = self._init_cache()
         self.pull_source: Optional[Callable[[], Optional[Request]]] = None
         self.completed: List[Request] = []
+        # requests whose eviction snapshot pins shared blocks in OUR pool:
+        # before a pool reset (model swap) kills the pins, the pinned pages
+        # are materialized into the snapshots so the requests stay
+        # resumable (see _materialize_pinned_snapshots)
+        self._pinned_snapshots: List[Request] = []
         self._pushback: Optional[Request] = None
         # requests that finished INSIDE admit() (legacy path, EOS/max_new on
         # the prefill token); drained into the next step()'s return value
@@ -275,6 +313,12 @@ class ContinuousBatchingEngine:
                                      donate_argnums=chunk_donate)
         self._burst_fn = jax.jit(self._decode_burst_impl,
                                  donate_argnums=chunk_donate)
+        # COW page copy: dst pages <- src pages across every pool leaf
+        # (axis 1 = blocks).  Donated so XLA updates the pool in place.
+        self._cow_fn = jax.jit(
+            lambda cache, src, dst: jax.tree.map(
+                lambda full: full.at[:, dst].set(full[:, src]), cache),
+            donate_argnums=(0,) if self.cfg.donate_buffers else ())
         self._prefill_cache = {}  # per-length jitted single-shot prefill
         self._bt_device = None
         self._bt_version_seen = -1
@@ -431,24 +475,58 @@ class ContinuousBatchingEngine:
             lambda full, snap: full.at[:, b].set(jnp.asarray(snap)),
             self.cache, snapshot)
 
-    def _extract_pages(self, req_id: int):
-        """Paged eviction snapshot: copy ONLY the sequence's pages (axis 1
-        of each (layers, num_blocks, ...) pool leaf) to host memory — the
-        physical reclamation the dense per-slot layout couldn't do."""
-        bt = np.asarray(self.block_mgr.block_table(req_id), np.int32)
+    def _extract_pages(self, block_ids: List[int]):
+        """Paged eviction snapshot: copy ONLY the given pages (axis 1 of
+        each (layers, num_blocks, ...) pool leaf) to host memory — the
+        physical reclamation the dense per-slot layout couldn't do.  Under
+        prefix sharing the caller passes only the PRIVATE tail (shared
+        blocks stay alive in the pool, pinned by the snapshot)."""
+        bt = np.asarray(block_ids, np.int32)
         return jax.tree.map(lambda full: np.asarray(full[:, bt]), self.cache)
 
-    def _restore_pages(self, snapshot, block_ids: List[int]) -> None:
-        """Scatter snapshotted page contents into freshly allocated pages.
-        The allocation may be LARGER than the snapshot (the resume also
-        reserves the next decode step's slot); extra pages are written
-        before they are ever read."""
+    def _restore_pages(self, snapshot, block_ids: List[int],
+                       offset: int = 0) -> None:
+        """Scatter snapshotted page contents into freshly allocated pages
+        starting at logical position ``offset`` (the pinned shared prefix,
+        already resident, precedes them).  The allocation may be LARGER
+        than the snapshot (the resume also reserves the next decode step's
+        slot); extra pages are written before they are ever read."""
         n_snap = jax.tree.leaves(snapshot)[0].shape[1]
-        assert len(block_ids) >= n_snap, (len(block_ids), n_snap)
-        ids = jnp.asarray(np.asarray(block_ids[:n_snap], np.int32))
+        assert len(block_ids) - offset >= n_snap, \
+            (len(block_ids), offset, n_snap)
+        ids = jnp.asarray(np.asarray(block_ids[offset:offset + n_snap],
+                                     np.int32))
         self.cache = jax.tree.map(
             lambda full, snap: full.at[:, ids].set(jnp.asarray(snap)),
             self.cache, snapshot)
+
+    def _apply_cow(self) -> None:
+        """Apply pending copy-on-write page copies (BlockManager re-pointed
+        the tables; the page CONTENTS move here) — must run before any
+        dispatch that could write a COW destination page, and before an
+        eviction snapshot reads one."""
+        if not self.paged:
+            return
+        ops = self.block_mgr.take_cow_ops()
+        if not ops:
+            return
+        # pad to a power-of-two width so _cow_fn compiles O(log max_ops)
+        # distinct shapes, not one per pending-op count (a mid-serve
+        # compile is exactly the host-side stall class the device-resident
+        # loop removed).  Padding repeats the last real op: duplicate
+        # scatter indices carrying IDENTICAL values are deterministic,
+        # whereas an identity pad could collide with a real op on the same
+        # destination page
+        width = 1
+        while width < len(ops):
+            width *= 2
+        pad = [ops[-1]] * (width - len(ops))
+        src = jnp.asarray(np.asarray([s for s, _ in ops] + [p[0] for p in pad],
+                                     np.int32))
+        dst = jnp.asarray(np.asarray([d for _, d in ops] + [p[1] for p in pad],
+                                     np.int32))
+        self.cache = self._cow_fn(self.cache, src, dst)
+        self.stats.cow_copies += len(ops)
 
     def active_slots(self) -> List[int]:
         return [i for i, r in enumerate(self.slots) if r is not None]
@@ -483,6 +561,28 @@ class ContinuousBatchingEngine:
             owed += max(self.block_mgr.blocks_needed(r.prompt_len + 1) - have, 0)
         return owed
 
+    def _usable_pins(self, snap) -> Optional[List[int]]:
+        """The pinned shared blocks of an eviction snapshot, IF they live in
+        THIS engine's current pool (owner + epoch match).  ``[]`` for an
+        unshared snapshot; None when the pins belong to another pool (or a
+        pool epoch that has since been reset) — the prefix KV is then
+        unreachable here."""
+        pinned = snap.get("pinned") or []
+        if not pinned:
+            return []
+        if snap.get("pin_owner") is self.block_mgr \
+                and snap.get("pin_epoch") == self.block_mgr.epoch:
+            return pinned
+        return None
+
+    def _discard_snapshot(self, req: Request) -> None:
+        """Drop a snapshot, releasing any pins it holds on its SOURCE pool
+        (the snapshot carries its owner, so this is safe cross-engine;
+        stale epochs no-op inside release_pins)."""
+        snap, req.snapshot = req.snapshot, None
+        if snap and snap.get("pinned"):
+            snap["pin_owner"].release_pins(snap["pinned"], snap["pin_epoch"])
+
     def can_admit(self, req: Request) -> bool:
         if self._free_slot() is None:
             return False
@@ -492,6 +592,19 @@ class ContinuousBatchingEngine:
             # pushback) instead of exploding inside admit()
             return False
         snap = req.snapshot
+        shared_blocks = 0
+        if snap is not None:
+            pins = self._usable_pins(snap)
+            if pins is None and req.generated > 0:
+                # shared blocks pinned in another pool: not resumable here
+                # mid-decode (admit would raise) — let the pull loop hand
+                # the request back instead
+                return False
+            shared_blocks = len(pins or ())
+        elif self.prefix_sharing and self._use_chunked(req.extras or {}):
+            # admission-time prefix match: indexed chains arrive from the
+            # pool, not the free list
+            shared_blocks = len(self.block_mgr.match_prefix(req.prompt_tokens))
         if snap is not None \
                 and snap.get("prefill_pos", req.prompt_len) >= req.prompt_len:
             # decode-phase resume: only the snapshotted tokens plus the next
@@ -509,7 +622,8 @@ class ContinuousBatchingEngine:
         # both pass the check and one would be guaranteed to preempt
         # mid-prefill.
         return self.block_mgr.can_allocate(
-            need, reserve_blocks=self._owed_prefill_blocks())
+            need, reserve_blocks=self._owed_prefill_blocks(),
+            shared_blocks=shared_blocks)
 
     def _use_chunked(self, extras: Dict[str, Any]) -> bool:
         return (self.cfg.prefill_chunk_tokens > 0
@@ -546,11 +660,24 @@ class ContinuousBatchingEngine:
             # nothing was generated yet; past that the generated tokens'
             # KV is unrecoverable.
             if req.generated == 0:
-                req.snapshot = None
+                self._discard_snapshot(req)
             else:
                 raise ValueError(
                     f"cannot resume a {req.snapshot.get('layout', 'dense')} "
                     f"KV snapshot on a {my_layout} engine mid-decode")
+        if req.snapshot is not None \
+                and self._usable_pins(req.snapshot) is None:
+            # the snapshot's shared-prefix blocks are pinned in ANOTHER
+            # engine's pool (or an epoch that has been reset): only the
+            # private pages travelled with the snapshot, so the prefix KV
+            # is unreachable here.  Recompute when nothing was generated
+            # yet (the discard releases the foreign pins).
+            if req.generated == 0:
+                self._discard_snapshot(req)
+            else:
+                raise ValueError(
+                    "cannot resume a prefix-shared KV snapshot outside the "
+                    "engine that evicted it mid-decode")
         if req.snapshot is not None \
                 and req.snapshot.get("prefill_pos", req.prompt_len) < req.prompt_len \
                 and not self._use_chunked(ex):
@@ -558,7 +685,7 @@ class ContinuousBatchingEngine:
             # (chunking disabled, or the arch has no prefill_chunk): drop it
             # and recompute the full prefill instead of spinning on a
             # zero-token chunk round
-            req.snapshot = None
+            self._discard_snapshot(req)
         if req.snapshot is not None:
             # eviction resume: restore KV/state, no prefill recompute.
             # Mid-prefill snapshots resume chunking from the last chunk.
@@ -573,23 +700,50 @@ class ContinuousBatchingEngine:
                 alloc_tokens = max(kv_tokens, length + 1)
             else:
                 alloc_tokens = int(snap.get("kv_tokens", ppos))
-            blocks = self.block_mgr.allocate(req.req_id, alloc_tokens)
+            pinned = self._usable_pins(snap) or []
+            if pinned:
+                # the shared prefix never left the pool (snapshot-pinned):
+                # the pins transfer back to the sequence, only the private
+                # tail below is re-scattered from host memory
+                blocks = self.block_mgr.resume_pinned(req.req_id, pinned,
+                                                      alloc_tokens)
+            else:
+                blocks = self.block_mgr.allocate(req.req_id, alloc_tokens)
             self.block_mgr.bind_slot(req.req_id, slot)
             if self.paged:
-                self._restore_pages(snap["cache"], blocks)
+                self._restore_pages(snap["cache"], blocks,
+                                    offset=len(pinned))
             else:
                 self._restore_cache(snap["cache"], slot)
             self.lengths[slot] = length
             self.prefill_pos[slot] = ppos
-            req.snapshot = None
+            req.snapshot = None  # pins were transferred, not released
             self.stats.resumes += 1
             self.slots[slot] = req
         elif self._use_chunked(ex):
-            first = min(self._chunk_quantum(), req.prompt_len)
-            self.block_mgr.allocate(req.req_id, first)
+            shared: List[int] = []
+            if self.prefix_sharing:
+                self.stats.prefix_lookups += 1
+                shared = self.block_mgr.match_prefix(req.prompt_tokens)
+            # first unshared token: chunked prefill starts here (the match
+            # is capped at prompt_len - 1, so the final chunk always has at
+            # least one real token and produces the first-token logits)
+            start = len(shared) * self.cfg.block_size
+            first = min(self._chunk_quantum(), req.prompt_len - start)
+            if shared:
+                self.block_mgr.share_prefix(req.req_id, start + first, shared)
+                self.stats.prefix_hits += 1
+                self.stats.prefix_shared_blocks += len(shared)
+                self.stats.prefix_shared_tokens += start
+            else:
+                self.block_mgr.allocate(req.req_id, first)
+            # unconditional: a re-admission that missed the cache (e.g. a
+            # recompute on another engine) must clear any stale hit record
+            req.prefix_shared_tokens = start
+            self.stats.prompt_tokens_admitted += req.prompt_len
             self.block_mgr.bind_slot(req.req_id, slot)
-            self.prefill_pos[slot] = 0
-            self.lengths[slot] = 0
+            self.prefill_pos[slot] = start
+            self.lengths[slot] = start
             self.slots[slot] = req
         else:
             if self.paged:
@@ -639,19 +793,44 @@ class ContinuousBatchingEngine:
         """
         req = self.slots[slot]
         assert req is not None
+        kv_tokens = self.block_mgr.seq_tokens(req.req_id) \
+            if self.block_mgr.has(req.req_id) else 0
+        if self.paged:
+            # pending COW copies must land before the snapshot reads pages
+            self._apply_cow()
+            # shared leading blocks are NOT freed and NOT copied: the
+            # departing sequence's reference becomes a snapshot pin, so the
+            # chain survives in the pool (and stays prefix-matchable) even
+            # if every other sharer finishes before this request resumes.
+            # Only the privately-owned tail pages travel to host memory.
+            pinned, private = self.block_mgr.evict_split(req.req_id)
+            cache_snap = self._extract_pages(private)
+        else:
+            pinned = []
+            cache_snap = self._extract_cache(slot)
+            self.block_mgr.free(req.req_id)
         req.snapshot = {
-            "cache": (self._extract_pages(req.req_id) if self.paged
-                      else self._extract_cache(slot)),
+            "cache": cache_snap,
             "length": int(self.lengths[slot]),
             "prefill_pos": int(self.prefill_pos[slot]),
             # blocks to re-allocate on resume (paged restore needs the page
             # count to match; dense resume keeps the same accounting)
-            "kv_tokens": self.block_mgr.seq_tokens(req.req_id)
-            if self.block_mgr.has(req.req_id) else 0,
+            "kv_tokens": kv_tokens,
             "layout": "paged" if self.paged else "dense",
+            # prefix-sharing pin bookkeeping (empty without sharing)
+            "pinned": pinned,
+            "pin_owner": self.block_mgr,
+            "pin_epoch": self.block_mgr.epoch,
+            "shared_tokens": len(pinned) * self.cfg.block_size,
         }
         req.n_evictions += 1
-        self.block_mgr.free(req.req_id)
+        if pinned:
+            # opportunistic purge: entries whose snapshot was consumed by a
+            # resume (or discarded) need no materialization at swap time
+            self._pinned_snapshots = [
+                r for r in self._pinned_snapshots
+                if r.snapshot is not None and r.snapshot.get("pinned")]
+            self._pinned_snapshots.append(req)
         self.slots[slot] = None
         self.lengths[slot] = 0
         self.prefill_pos[slot] = 0
@@ -668,6 +847,69 @@ class ContinuousBatchingEngine:
         """Evict everything (used before a model swap)."""
         return [self.evict_slot(i) for i in self.active_slots()]
 
+    def _materialize_pinned_snapshots(self) -> None:
+        """Promote every still-live pinned snapshot to a self-contained one:
+        copy the pinned pages' CONTENTS into the snapshot (prepended before
+        the private tail) and release the pins.  Must run while the pool
+        buffers are still alive — called before a pool reset (model swap)
+        would kill the pins, so a request evicted with a shared prefix
+        stays resumable after the engine swaps back to its model (the
+        pre-sharing behavior)."""
+        for req in self._pinned_snapshots:
+            snap = req.snapshot
+            if not snap or not snap.get("pinned") \
+                    or snap.get("pin_owner") is not self.block_mgr \
+                    or snap.get("pin_epoch") != self.block_mgr.epoch:
+                continue  # resumed / discarded / stale — nothing to save
+            pinned = snap["pinned"]
+            shared_pages = self._extract_pages(pinned)
+            snap["cache"] = jax.tree.map(
+                lambda shared, private: np.concatenate([shared, private],
+                                                       axis=1),
+                shared_pages, snap["cache"])
+            self.block_mgr.release_pins(pinned, snap["pin_epoch"])
+            snap["pinned"] = []
+        self._pinned_snapshots = []
+
+    # ------------------------------------------------------------------
+    # fork (parallel-sampling style sequence cloning)
+    # ------------------------------------------------------------------
+    def fork_slot(self, slot: int) -> Optional[Request]:
+        """Clone a decode-phase request into a free slot, sharing EVERY KV
+        page with the source (refcounts, zero page copies; the manager
+        copy-on-writes a partial tail block so the two decodes never
+        scatter into the same page — the copy lands at the next dispatch).
+        Greedy decoding makes the clone deterministic: it continues exactly
+        as the source would.  Returns None when no slot is free; raises
+        OutOfBlocksError when the tail COW can't get a block.  Paged
+        backends with ``prefix_sharing`` only."""
+        if not self.prefix_sharing:
+            raise ValueError(
+                "fork_slot requires a paged attention backend with "
+                "EngineConfig.prefix_sharing enabled")
+        src = self.slots[slot]
+        assert src is not None, slot
+        if self.prefill_pos[slot] < src.prompt_len:
+            raise ValueError("cannot fork a mid-prefill slot")
+        new_slot = self._free_slot()
+        if new_slot is None:
+            return None
+        clone = Request(
+            prompt_tokens=list(src.prompt_tokens), model=src.model,
+            slo=src.slo, arrival_time=src.arrival_time,
+            max_new_tokens=src.max_new_tokens, slo_class=src.slo_class,
+            priority=src.priority)
+        clone.output_tokens = list(src.output_tokens)
+        clone.generated = src.generated
+        clone.first_token_time = src.first_token_time
+        self.block_mgr.fork(src.req_id, clone.req_id)
+        self.block_mgr.bind_slot(clone.req_id, new_slot)
+        self.slots[new_slot] = clone
+        self.lengths[new_slot] = self.lengths[slot]
+        self.prefill_pos[new_slot] = self.prefill_pos[slot]
+        self.stats.forks += 1
+        return clone
+
     # ------------------------------------------------------------------
     # model swapping LSO
     # ------------------------------------------------------------------
@@ -675,9 +917,15 @@ class ContinuousBatchingEngine:
         t0 = time.monotonic()
         evicted = self.flush()
         # swapped-out requests' snapshots belong to the OLD model: drop them
-        # (their KV is meaningless under the new weights)
+        # (their KV is meaningless under the new weights; discard releases
+        # any prefix-sharing pins before the pool reset below)
         for r in evicted:
-            r.snapshot = None
+            self._discard_snapshot(r)
+        # EARLIER evictions' snapshots stay valid (the VQ re-feeds them only
+        # when their model is loaded again): the pool reset below would kill
+        # their pins, so copy the pinned page contents into the snapshots
+        # while the old pool buffers are still alive
+        self._materialize_pinned_snapshots()
         self.model = self._with_backend(model)
         self.params = params
         self.model_name = model_name
@@ -753,6 +1001,9 @@ class ContinuousBatchingEngine:
             chunks[i] = (chunk, n, final)
         if not chunks:
             return
+        # COW copies from the extends above (shared partial tails) must
+        # land before this dispatch writes the destination pages
+        self._apply_cow()
         bucket = self._bucket_for(max(n for _, n, _ in chunks.values()))
         tokens = np.zeros((self.cfg.max_slots, bucket), np.int32)
         starts = np.zeros(self.cfg.max_slots, np.int32)
@@ -784,6 +1035,12 @@ class ContinuousBatchingEngine:
             req = self.slots[i]
             self.prefill_pos[i] += n
             self.lengths[i] = self.prefill_pos[i]
+            if self.prefix_sharing:
+                # publish the prompt blocks this chunk completed: later
+                # admissions with the same leading tokens attach to these
+                # pages instead of re-prefilling them
+                self.block_mgr.register_prefix(
+                    req.req_id, req.prompt_tokens, int(self.prefill_pos[i]))
             if final:
                 tok = int(toks_out[i])
                 if req.first_token_time is None:
@@ -799,6 +1056,9 @@ class ContinuousBatchingEngine:
         if not active:
             return
         t0 = time.monotonic()
+        # pending COW copies (previous round's append_token, fork_slot)
+        # must land before this dispatch writes the destination pages
+        self._apply_cow()
         tokens = np.zeros(self.cfg.max_slots, np.int32)
         for i in active:
             tokens[i] = self.slots[i].output_tokens[-1] if self.slots[i].output_tokens \
@@ -850,16 +1110,24 @@ class ContinuousBatchingEngine:
         a slot that retires at the boundary writes nothing past it).
         Returns 0 when not even n=2 fits — the caller falls back to the
         single-step round, whose per-token append/preempt logic owns the
-        pool-exhaustion endgame (vLLM-style preemption parity)."""
+        pool-exhaustion endgame (vLLM-style preemption parity).
+
+        Under prefix sharing a slot whose partial tail block is still
+        shared (refcount > 1) needs ONE extra free block: ``extend`` will
+        copy-on-write the tail before the burst may scatter into it."""
         rem, cur = {}, {}
+        cow_extra = 0
         for i in active:
             r = self.slots[i]
             rem[i] = min(r.max_new_tokens - r.generated,
                          self.cfg.max_seq_len - int(self.lengths[i]))
             cur[i] = len(self.block_mgr.block_table(r.req_id))
+            if self.prefix_sharing \
+                    and self.block_mgr.append_needs_cow(r.req_id):
+                cow_extra += 1
 
         def blocks_short(n: int) -> int:
-            need = 0
+            need = cow_extra
             for i in active:
                 tokens = min(int(self.lengths[i]) + min(n, rem[i]) + 1,
                              self.cfg.max_seq_len)
@@ -897,6 +1165,9 @@ class ContinuousBatchingEngine:
             self._decode_round(done)
             return
         t0 = time.monotonic()
+        # COW copies from _plan_burst's extends (and any earlier fork /
+        # append) must land before the fused loop writes those pages
+        self._apply_cow()
         tokens = np.zeros(self.cfg.max_slots, np.int32)
         remaining = np.zeros(self.cfg.max_slots, np.int32)
         active_mask = np.zeros(self.cfg.max_slots, bool)

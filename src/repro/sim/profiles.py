@@ -73,8 +73,18 @@ def profiles_for(device: str, models=None) -> Dict[str, HardwareProfile]:
 
 def calibrate_from_engine(engine, token_capacity: int,
                           swap_time: float = 0.1,
-                          model_max_tokens: int = 64) -> HardwareProfile:
-    """Paper §6 'Hardware Profiling': one batch run on the real engine."""
+                          model_max_tokens: int = 64,
+                          dispatch_overhead: float = 0.0) -> HardwareProfile:
+    """Paper §6 'Hardware Profiling': one batch run on the real engine.
+
+    ``decode_per_token`` is measured at the engine's configured
+    ``decode_burst`` (profile() drives ``steps()``), so the per-dispatch
+    host overhead is already amortized INTO the measurement at that burst
+    width; the profile carries the width so the simulator charges the same
+    amortization.  Pass ``dispatch_overhead`` (absolute seconds per
+    dispatch, e.g. derived from engine_bench's host_overhead_fraction x
+    wall_us_per_iter) to model re-running the same instance at a DIFFERENT
+    burst width without re-profiling."""
     import numpy as np
     # the longest calibration prompt that fits alongside the decode budget:
     # short prompts would extrapolate fixed per-step dispatch overhead into
@@ -102,4 +112,8 @@ def calibrate_from_engine(engine, token_capacity: int,
         # engine's window-clamped quantum (engine._chunk_quantum also caps
         # at max_seq_len, so mirror both bounds)
         sliding_window=None if engine.model.cfg.sliding_window is None
-        else min(engine.model.cfg.sliding_window, engine.cfg.max_seq_len))
+        else min(engine.model.cfg.sliding_window, engine.cfg.max_seq_len),
+        # burst-aware dispatch accounting: the sim charges the per-dispatch
+        # overhead once per decode_burst iterations, mirroring steps()
+        decode_burst=max(engine.cfg.decode_burst, 1),
+        dispatch_overhead=dispatch_overhead)

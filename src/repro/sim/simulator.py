@@ -156,22 +156,32 @@ class SimInstance:
             req = self.vq.next_request(self.loaded_model)
             if req is None:
                 break
-            need = req.prompt_len + req.generated + 1
+            fresh = req.generated == 0  # eviction resume restores KV, no prefill
+            # shared-prefix cache hits (ground truth, like
+            # true_output_tokens): the leading run neither occupies new KV
+            # (it rides the shared chain) nor runs prefill compute.  Only
+            # first admissions benefit; a resume restores its snapshot.
+            shared = 0
+            if fresh:
+                shared = min(max(getattr(req, "prefix_shared_tokens", 0), 0),
+                             max(req.prompt_len - 1, 0))
+            need = req.prompt_len + req.generated + 1 - shared
             if self.kv_used + need > self.capacity():
                 break
             req._in_flight = True
             rem = max((req.true_output_tokens or req.max_new_tokens) - req.generated, 1)
-            fresh = req.generated == 0  # eviction resume restores KV, no prefill
             pre = 0
             if fresh and self.traits.prefill_chunk_tokens:
                 # mid-prefill evictions resume from their snapshot progress
-                pre = req.prompt_len - getattr(req, "_prefill_done", 0)
+                # (which already covers the shared run — don't double-count)
+                done = max(getattr(req, "_prefill_done", 0), shared)
+                pre = max(req.prompt_len - done, 0)
             self.running.append(SimSeq(req, kv_tokens=need - 1, remaining=rem,
                                        prefill_remaining=pre))
             self.kv_used += need - 1
             admitted += 1
             if fresh:
-                prompt_tokens += req.prompt_len
+                prompt_tokens += req.prompt_len - shared
         return admitted, prompt_tokens
 
     def iteration(self, now: float) -> Tuple[float, List[Request]]:
@@ -208,10 +218,15 @@ class SimInstance:
                 self.stats.prefill_rounds += 1
             if any(s.prefill_remaining == 0 for s in self.running):
                 # the engine's decode round is a no-op while every running
-                # sequence is still mid-prefill — don't charge d for it
-                dur += hw.decode_per_token
+                # sequence is still mid-prefill — don't charge d for it.
+                # Chunk-interleaved iterations dispatch single-step (the
+                # engine's burst fallback), so no dispatch amortization.
+                dur += hw.decode_seconds(1 if processed else None)
         else:
-            dur += hw.decode_per_token
+            # burst-amortized per-iteration cost: the engine fuses
+            # decode_burst iterations per dispatch, so the per-dispatch
+            # host overhead is charged once per burst, not once per token
+            dur += hw.decode_seconds()
             if admitted:
                 # lump accounting: prefill cost scales with admitted PROMPT
                 # tokens (the paper's §6 observation: per-input-token cost

@@ -26,6 +26,9 @@ def small_model():
     return cfg, model, params
 
 
+BACKENDS = ("xla", "pallas", "paged-xla", "paged-pallas")
+
+
 def _mk_engine(model, params, **kw):
     cfg = EngineConfig(**{"max_slots": 4, "max_seq_len": 64,
                           "prefill_chunk_tokens": 16, "block_size": 8, **kw})
@@ -258,3 +261,340 @@ def test_cross_layout_snapshot_falls_back_or_raises(small_model):
     dense_eng.evict_request(r2.req_id)
     with pytest.raises(ValueError):
         _mk_engine(model, params, attention_backend="paged-xla").admit(r2)
+
+
+# ---------------------------------------------------------------------------
+# prefix sharing: refcounted shared-prefix pages + copy-on-write (ISSUE 5)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    """1-layer/64-dim model: the sharing matrix below builds many engines."""
+    cfg = ARCHITECTURES["granite-3-2b"].reduced(num_layers=1, d_model=64)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(2))
+    return cfg, model, params
+
+
+def _shared_prompts(n=4, shared_blocks=2, bs=8):
+    """n prompts sharing a ``shared_blocks``-block leading run, with
+    distinct-length private tails."""
+    rng = np.random.default_rng(5)
+    common = rng.integers(0, 100, size=shared_blocks * bs).tolist()
+    tails = (5, 9, 3, 12, 7, 11, 2, 8)
+    return [common + rng.integers(0, 100, size=t).tolist()
+            for t in tails[:n]]
+
+
+def _serve_shared(model, params, backend, *, sharing, burst=1, evict=True,
+                  n_new=12):
+    """Leader admitted first (its chunks publish the shared blocks), then
+    three followers; one sharer is evicted and resumed mid-stream."""
+    eng = _mk_engine(model, params, attention_backend=backend,
+                     prefix_sharing=sharing, decode_burst=burst)
+    reqs = [_req(p, n=n_new) for p in _shared_prompts()]
+    assert eng.admit(reqs[0])
+    while eng.prefilling_slots():
+        eng.steps()
+    for r in reqs[1:]:
+        assert eng.admit(r)
+    eng.steps()
+    eng.steps()
+    if evict:
+        ev = eng.evict_request(reqs[1].req_id)        # a sharer, mid-stream
+        assert ev is reqs[1] and reqs[1].snapshot is not None
+        eng.steps()                                   # others advance
+        assert eng.admit(reqs[1])                     # snapshot resume
+        assert eng.stats.resumes == 1
+    for _ in range(300):
+        eng.steps()
+        if all(r.finished() for r in reqs):
+            break
+    assert all(r.finished() for r in reqs)
+    assert eng.block_mgr.used_blocks == 0
+    return [r.output_tokens for r in reqs], eng
+
+
+def test_prefix_sharing_token_parity_all_backends(tiny_model):
+    """The satellite acceptance bar: byte-identical tokens with
+    prefix_sharing on vs off across all four backends, including COW
+    divergence after the shared region, mid-stream evict+resume of one
+    sharer, and decode_burst in {1, 4}."""
+    _, model, params = tiny_model
+    want, _ = _serve_shared(model, params, "xla", sharing=False)
+    assert all(len(t) == 12 for t in want)
+    for backend in BACKENDS:
+        runs = [(False, 1), (True, 1), (True, 4)]
+        if backend == "xla":
+            runs.remove((False, 1))                   # that's `want` itself
+        for sharing, burst in runs:
+            got, eng = _serve_shared(model, params, backend,
+                                     sharing=sharing, burst=burst)
+            assert got == want, (backend, sharing, burst)
+            if eng.prefix_sharing:
+                # all three followers matched the leader's 2-block chain
+                assert eng.stats.prefix_hits == 3, (backend, burst)
+                assert eng.stats.prefix_shared_tokens == 3 * 16
+            else:
+                assert eng.stats.prefix_hits == 0
+
+
+def test_prefix_sharing_int8_parity(tiny_model):
+    """int8 page pools share scale pages along with the quantized KV
+    pages: token parity with sharing on vs off."""
+    cfg = dataclasses.replace(
+        ARCHITECTURES["granite-3-2b"].reduced(num_layers=1, d_model=64),
+        kv_quant=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(3))
+    want, _ = _serve_shared(model, params, "paged-xla", sharing=False)
+    for backend in ("paged-xla", "paged-pallas"):
+        got, eng = _serve_shared(model, params, backend, sharing=True)
+        assert got == want, backend
+        assert eng.stats.prefix_hits == 3
+
+
+def test_prefix_sharing_block_usage_acceptance(tiny_model):
+    """The ISSUE acceptance criterion: 8 requests sharing a 75%-length
+    prefix occupy ~ 1 shared chain + 8 private tails during the prompt
+    phase, vs 8 full chains with sharing off."""
+    _, model, params = tiny_model
+    rng = np.random.default_rng(7)
+    common = rng.integers(0, 100, size=24).tolist()            # 3 blocks
+    prompts = [common + rng.integers(0, 100, size=8).tolist()  # 32 tokens
+               for _ in range(8)]
+
+    def prompt_blocks(sharing):
+        eng = _mk_engine(model, params, attention_backend="paged-xla",
+                         prefix_sharing=sharing, max_slots=8)
+        # max_new sized so no request retires before the prompt-phase pool
+        # measurement (the leader decodes while followers prefill)
+        reqs = [_req(p, n=8) for p in prompts]
+        assert eng.admit(reqs[0])
+        while eng.prefilling_slots():
+            eng.step()
+        for r in reqs[1:]:
+            assert eng.admit(r)
+        while eng.prefilling_slots():
+            eng.step()
+        used = eng.block_mgr.used_blocks
+        for _ in range(60):
+            eng.step()
+            if all(r.finished() for r in reqs):
+                break
+        assert all(r.finished() for r in reqs)
+        return used, [r.output_tokens for r in reqs], eng.stats
+
+    used_on, toks_on, stats = prompt_blocks(True)
+    used_off, toks_off, _ = prompt_blocks(False)
+    # blocks_needed(33) = 5 per chain: 8 full chains = 40; shared = the
+    # 3-block chain + 8 private (2-block) tails = 19
+    assert used_off == 40
+    assert used_on == 3 + 8 * 2
+    assert toks_on == toks_off
+    assert stats.prefix_hits == 7
+    assert stats.prefix_shared_tokens == 7 * 24
+
+
+def test_shared_eviction_pins_survive_sharer_completion(tiny_model):
+    """Evicting a sharer pins the shared chain instead of freeing or
+    copying it: the snapshot holds ONLY the private tail pages, and the
+    chain stays alive for the resume even after every other sharer
+    finishes and frees its references."""
+    _, model, params = tiny_model
+    prompts = _shared_prompts(n=2)
+    base = _mk_engine(model, params, attention_backend="paged-pallas",
+                      prefix_sharing=False)
+    base_reqs = [_req(p, n=8) for p in prompts]
+    for r in base_reqs:
+        assert base.admit(r)
+    _run_to_completion(base, base_reqs)
+    want = [r.output_tokens for r in base_reqs]
+
+    eng = _mk_engine(model, params, attention_backend="paged-pallas",
+                     prefix_sharing=True)
+    ra, rb = [_req(p, n=8) for p in prompts]
+    assert eng.admit(ra)
+    while eng.prefilling_slots():
+        eng.step()
+    assert eng.admit(rb)
+    eng.step()
+    eng.step()
+    assert eng.evict_request(rb.req_id) is rb
+    snap = rb.snapshot
+    assert snap["pinned"] and len(snap["pinned"]) == 2    # the shared chain
+    # only privately-owned pages were copied to host memory
+    n_private = len(eng.block_mgr.block_table(ra.req_id)) - 2
+    assert jax.tree.leaves(snap["cache"])[0].shape[1] \
+        == eng.block_mgr.blocks_needed(snap["kv_tokens"]) - 2
+    assert n_private >= 1
+    # drain the other sharer COMPLETELY while rb is evicted
+    for _ in range(60):
+        eng.step()
+        if ra.finished():
+            break
+    assert ra.finished()
+    # the pinned chain is still resident (refcount 1 = the pin itself)
+    assert all(eng.block_mgr.ref_count(b) == 1 for b in snap["pinned"])
+    assert eng.admit(rb)                                  # pins transfer back
+    for _ in range(60):
+        eng.step()
+        if rb.finished():
+            break
+    assert rb.finished()
+    assert [ra.output_tokens, rb.output_tokens] == want
+    assert eng.block_mgr.used_blocks == 0
+
+
+def test_pinned_snapshot_is_engine_local(tiny_model):
+    """A prefix-shared snapshot pins pages in its source pool: another
+    engine must refuse it mid-decode (ValueError) and recompute it
+    mid-prefill (releasing the foreign pins)."""
+    _, model, params = tiny_model
+    prompts = _shared_prompts(n=2)
+    eng_a = _mk_engine(model, params, attention_backend="paged-xla",
+                       prefix_sharing=True)
+    ra, rb = [_req(p, n=6) for p in prompts]
+    assert eng_a.admit(ra)
+    while eng_a.prefilling_slots():
+        eng_a.step()
+    assert eng_a.admit(rb)
+    eng_a.step()
+    eng_a.step()
+    assert rb.generated > 0
+    eng_a.evict_request(rb.req_id)
+    assert rb.snapshot["pinned"]
+
+    eng_b = _mk_engine(model, params, attention_backend="paged-xla",
+                       prefix_sharing=True)
+    assert not eng_b.can_admit(rb)       # pull loop gets a graceful refusal
+    assert not eng_b.admit(rb)           # admit's can_admit gate holds too
+    assert rb.snapshot is not None       # ... without consuming the snapshot
+    assert eng_a.admit(rb)               # the owning engine still resumes it
+    for _ in range(60):
+        eng_a.step()
+        if ra.finished() and rb.finished():
+            break
+    assert ra.finished() and rb.finished()
+
+    # mid-prefill foreign resume: recompute, releasing the foreign pins
+    long_prompt = prompts[0] + list(range(30))
+    rc = _req(prompts[0], n=4)
+    rd = _req(long_prompt, n=4)
+    assert eng_a.admit(rc)
+    while eng_a.prefilling_slots():
+        eng_a.step()
+    assert eng_a.admit(rd)               # shares rc's chain
+    eng_a.evict_request(rd.req_id)       # mid-prefill (long tail, chunk 16)
+    assert rd.snapshot["pinned"] and rd.generated == 0
+    pinned = list(rd.snapshot["pinned"])
+    refs_before = [eng_a.block_mgr.ref_count(b) for b in pinned]
+    assert eng_b.admit(rd)               # drops the snapshot, recomputes
+    assert rd.snapshot is None
+    # the discard released eng_a's pins (refcounts dropped by one)
+    refs_after = [eng_a.block_mgr.ref_count(b) for b in pinned]
+    assert refs_after == [r - 1 for r in refs_before]
+    for _ in range(120):
+        eng_a.step()
+        eng_b.step()
+        if rc.finished() and rd.finished():
+            break
+    assert rc.finished() and rd.finished()
+
+
+def test_fork_slot_cow_divergence(tiny_model):
+    """fork_slot clones a running decode with zero page copies; the COW of
+    the partial tail block isolates the two writers, and greedy decoding
+    makes the clone continue exactly like the source (both match the
+    unforked baseline)."""
+    _, model, params = tiny_model
+    prompt = _shared_prompts(n=1)[0]
+    base = _mk_engine(model, params, attention_backend="paged-pallas",
+                      prefix_sharing=False)
+    r_base = _req(prompt, n=10)
+    assert base.admit(r_base)
+    for _ in range(60):
+        base.step()
+        if r_base.finished():
+            break
+    assert r_base.finished()
+
+    eng = _mk_engine(model, params, attention_backend="paged-pallas",
+                     prefix_sharing=True)
+    src = _req(prompt, n=10)
+    assert eng.admit(src)
+    while eng.prefilling_slots():
+        eng.step()
+    eng.step()
+    eng.step()
+    clone = eng.fork_slot(0)
+    assert clone is not None and clone.output_tokens == src.output_tokens
+    assert eng.stats.forks == 1
+    for _ in range(60):
+        eng.step()
+        if src.finished() and clone.finished():
+            break
+    assert src.finished() and clone.finished()
+    assert src.output_tokens == r_base.output_tokens
+    assert clone.output_tokens == r_base.output_tokens
+    assert eng.stats.cow_copies >= 1     # the tail COW actually fired
+    assert eng.block_mgr.used_blocks == 0
+
+    # gating: dense engines (sharing inert) refuse fork_slot
+    dense = _mk_engine(model, params, attention_backend="xla")
+    rd = _req([1, 2, 3], n=2)
+    assert dense.admit(rd)
+    with pytest.raises(ValueError):
+        dense.fork_slot(0)
+
+
+def test_pinned_snapshot_survives_model_swap(tiny_model):
+    """A sharer evicted mid-decode must stay resumable across a model-swap
+    cycle: the pool reset would kill the snapshot's pins, so swap_model
+    first materializes the pinned pages INTO the snapshot (restoring the
+    pre-sharing self-contained-snapshot behavior), and the resumed run is
+    token-identical once the engine swaps back to the original weights."""
+    _, model, params = tiny_model
+    params_b = model.init(jax.random.key(9))
+    prompts = _shared_prompts(n=2)
+
+    base = _mk_engine(model, params, attention_backend="paged-xla",
+                      prefix_sharing=False)
+    base_reqs = [_req(p, n=8) for p in prompts]
+    for r in base_reqs:
+        assert base.admit(r)
+    _run_to_completion(base, base_reqs)
+    want = [r.output_tokens for r in base_reqs]
+
+    eng = _mk_engine(model, params, attention_backend="paged-xla",
+                     prefix_sharing=True)
+    ra, rb = [_req(p, n=8) for p in prompts]
+    assert eng.admit(ra)
+    while eng.prefilling_slots():
+        eng.step()
+    assert eng.admit(rb)
+    eng.step()
+    eng.step()
+    assert eng.evict_request(rb.req_id) is rb
+    n_chain = eng.block_mgr.blocks_needed(rb.snapshot["kv_tokens"])
+    assert rb.snapshot["pinned"]
+    for _ in range(60):                       # finish the other sharer
+        eng.step()
+        if ra.finished():
+            break
+    assert ra.finished()
+
+    eng.swap_model(model, params_b, "m2")     # pool reset kills the epoch...
+    assert rb.snapshot["pinned"] == []        # ...but the pins were
+    leaf = jax.tree.leaves(rb.snapshot["cache"])[0]
+    assert leaf.shape[1] == n_chain           # materialized into the snap
+    eng.swap_model(model, params, "m1")       # back to the original weights
+
+    assert eng.can_admit(rb)
+    assert eng.admit(rb)                      # plain self-contained restore
+    for _ in range(60):
+        eng.step()
+        if rb.finished():
+            break
+    assert rb.finished()
+    assert rb.output_tokens == want[1]

@@ -1,0 +1,323 @@
+"""BlockManager prefix-sharing property tests: random interleavings of
+allocate / share_prefix / fork / extend / append_token / free /
+evict_split / resume_pinned / release_pins / reset must conserve
+refcounts (every block's refcount equals its appearances across live
+sequence tables plus snapshot pins — the "sum of per-seq views == pool
+usage" invariant), never free a block that is still referenced, never let
+a freed-then-reused block appear in two live chains it doesn't belong to,
+keep the prefix index pointing only at live blocks, and keep the
+incrementally-maintained slot table identical to a from-scratch rebuild
+(extends the PR 4 property test to the sharing ops).
+
+The random walk runs twice: a seeded plain-pytest version (always on, so
+tier-1 exercises the invariants even without the optional ``hypothesis``
+dep) and a hypothesis-driven version that explores far more interleavings
+in CI.
+"""
+import numpy as np
+import pytest
+
+from repro.serving.kv_cache import BlockManager, OutOfBlocksError
+
+ROWS, WIDTH, BS, NUM_BLOCKS = 8, 16, 4, 24
+CAP = WIDTH * BS  # engine-enforced per-seq token bound
+# three prompt "families": sequences in the same family share a prefix
+# stream, so matches/shares actually happen
+FAMILIES = [
+    [100 + i for i in range(CAP)],
+    [200 + i for i in range(CAP)],
+    [100 + i for i in range(2 * BS)] + [300 + i for i in range(CAP - 2 * BS)],
+]
+
+OPS = ("alloc", "share", "fork", "extend", "append", "free",
+       "evict", "resume", "release", "reset")
+
+
+class _Harness:
+    """Drives a BlockManager the way the engine does (slot binding,
+    post-compute registration, COW-op draining) and mirrors enough state
+    to check the conservation invariants from the outside."""
+
+    def __init__(self):
+        self.bm = BlockManager(num_blocks=NUM_BLOCKS, block_size=BS)
+        self.bm.attach_slot_table(ROWS, WIDTH)
+        self.tokens = {}        # sid -> prompt stream (full family slice)
+        self.free_rows = set(range(ROWS))
+        self.row_of = {}
+        # sid -> (pinned_blocks, num_tokens, epoch) for evicted sequences
+        self.snapshots = {}
+        self.drained_cow = []
+
+    # -- engine-mimicking op wrappers ----------------------------------
+    def alloc(self, sid, fam, ntok):
+        if self.bm.has(sid) or sid in self.snapshots or not self.free_rows:
+            return
+        ntok = min(ntok, CAP)
+        if not self.bm.can_allocate(ntok):
+            return
+        self.bm.allocate(sid, ntok)
+        self.tokens[sid] = FAMILIES[fam]
+        self._bind(sid)
+        self._register(sid)
+
+    def share(self, sid, fam, ntok):
+        if self.bm.has(sid) or sid in self.snapshots or not self.free_rows:
+            return
+        toks = FAMILIES[fam]
+        matched = self.bm.match_prefix(toks[:min(ntok, CAP)])
+        if not matched:
+            return
+        ntok = max(min(ntok, CAP), len(matched) * BS)
+        if not self.bm.can_allocate(ntok, shared_blocks=len(matched)):
+            return
+        self.bm.share_prefix(sid, ntok, matched)
+        self.tokens[sid] = toks
+        self._bind(sid)
+        self._register(sid)
+
+    def fork(self, src, sid):
+        if not self.bm.has(src) or self.bm.has(sid) \
+                or sid in self.snapshots or not self.free_rows:
+            return
+        try:
+            self.bm.fork(src, sid)
+        except OutOfBlocksError:
+            return
+        self.tokens[sid] = self.tokens[src]
+        self._bind(sid)
+
+    def extend(self, sid, ntok):
+        if not self.bm.has(sid):
+            return
+        before = self.bm.seq_tokens(sid)
+        if not self.bm.extend(sid, min(ntok, CAP)):
+            assert self.bm.seq_tokens(sid) == before  # refusal mutates nothing
+        self._register(sid)
+
+    def append(self, sid):
+        if self.bm.has(sid) and self.bm.seq_tokens(sid) < CAP:
+            self.bm.append_token(sid)
+            self._register(sid)
+
+    def free(self, sid):
+        if self.bm.has(sid):
+            self.bm.free(sid)
+            self._unbind(sid)
+
+    def evict(self, sid):
+        if not self.bm.has(sid):
+            return
+        ntok = self.bm.seq_tokens(sid)
+        pinned, private = self.bm.evict_split(sid)
+        assert pinned + private  # the whole chain was split, none dropped
+        self.snapshots[sid] = (pinned, ntok, self.bm.epoch)
+        self._unbind(sid)
+
+    def resume(self, sid):
+        if sid not in self.snapshots or self.bm.has(sid) \
+                or not self.free_rows:
+            return
+        pinned, ntok, epoch = self.snapshots[sid]
+        if epoch != self.bm.epoch:      # pool reset while evicted: dead pins
+            del self.snapshots[sid]
+            return
+        if not self.bm.can_allocate(ntok, shared_blocks=len(pinned)):
+            return
+        self.bm.resume_pinned(sid, pinned, ntok)
+        del self.snapshots[sid]
+        self._bind(sid)
+
+    def release(self, sid):
+        if sid not in self.snapshots:
+            return
+        pinned, _, epoch = self.snapshots.pop(sid)
+        self.bm.release_pins(pinned, epoch)
+
+    def reset(self):
+        self.bm.reset()
+        # outstanding snapshot pins died with the epoch (release_pins on a
+        # stale epoch must no-op; exercised by later "release" ops)
+        self.tokens.clear()
+        self.free_rows = set(range(ROWS))
+        self.row_of.clear()
+
+    # -- helpers -------------------------------------------------------
+    def _bind(self, sid):
+        self.row_of[sid] = self.free_rows.pop()
+        self.bm.bind_slot(sid, self.row_of[sid])
+
+    def _unbind(self, sid):
+        self.free_rows.add(self.row_of.pop(sid))
+
+    def _register(self, sid):
+        # the engine registers full blocks as their chunks complete;
+        # registering up to the current allocation is the steady state
+        self.bm.register_prefix(sid, self.tokens[sid],
+                                self.bm.seq_tokens(sid))
+
+    def step(self, op, sid, ntok, fam):
+        version = self.bm.table_version
+        getattr(self, op)(*{
+            "alloc": (sid, fam, ntok), "share": (sid, fam, ntok),
+            "fork": ((sid + 1) % 8, sid), "extend": (sid, ntok),
+            "append": (sid,), "free": (sid,), "evict": (sid,),
+            "resume": (sid,), "release": (sid,), "reset": (),
+        }[op])
+        self.drained_cow.extend(self.bm.take_cow_ops())
+        self.check(version)
+
+    # -- invariants ----------------------------------------------------
+    def check(self, version_before=None):
+        bm = self.bm
+        assert bm.free_blocks + bm.used_blocks == bm.num_blocks
+        # refcount conservation: every block's refcount equals its
+        # appearances across live sequence tables plus snapshot pins —
+        # so freeing can never orphan or double-own a block, and a
+        # freed-then-reused block cannot linger in a stale chain
+        want_ref = np.zeros(bm.num_blocks, np.int64)
+        for s in bm._seqs.values():
+            for b in s.block_table:
+                want_ref[b] += 1
+        for pinned, _, epoch in self.snapshots.values():
+            if epoch == bm.epoch:
+                for b in pinned:
+                    want_ref[b] += 1
+        np.testing.assert_array_equal(bm._ref, want_ref)
+        # no block is freed while referenced / none both owned and free
+        free = set(bm._free)
+        assert all(want_ref[b] == 0 for b in free)
+        assert all(want_ref[b] >= 1
+                   for b in range(bm.num_blocks) if b not in free)
+        assert len(bm._free) == len(free)  # no duplicates on the free list
+        # per-seq table length tracks blocks_needed
+        for s in bm._seqs.values():
+            assert len(s.block_table) == bm.blocks_needed(s.num_tokens) \
+                or s.num_tokens % bm.block_size == 0
+            assert s.num_tokens <= len(s.block_table) * bm.block_size
+        # prefix index only names live blocks, bijectively with _block_key
+        for key, b in bm._index.items():
+            assert want_ref[b] >= 1, (key, b)
+            assert bm._block_key[b] == key
+        for b, key in bm._block_key.items():
+            assert bm._index[key] == b
+        # shared chains agree on content: walking the index reproduces
+        # each live sequence's own leading blocks
+        for sid, s in bm._seqs.items():
+            matched = bm.match_prefix(self.tokens[sid][:s.num_tokens],
+                                      max_tokens=s.num_tokens)
+            upto = min(len(matched), s.registered)
+            assert matched[:upto] == s.block_table[:upto], sid
+        # incremental slot table == from-scratch rebuild
+        want = np.full((ROWS, WIDTH), bm.num_blocks, np.int32)
+        for sid, r in self.row_of.items():
+            blocks = bm.block_table(sid)
+            want[r, :len(blocks)] = blocks
+        np.testing.assert_array_equal(bm.slot_table(), want)
+        # drained COW ops never name a still-shared destination
+        for _, dst in self.drained_cow[-4:]:
+            assert dst < bm.num_blocks
+
+
+def _run_walk(ops):
+    h = _Harness()
+    for op, sid, ntok, fam in ops:
+        h.step(op, sid, ntok, fam)
+    return h
+
+
+def test_seeded_random_walk_conserves_refcounts():
+    """Plain-pytest walk (no hypothesis needed): 60 seeded random op
+    sequences of length 120 over 8 sequence ids and 3 prompt families."""
+    rng = np.random.default_rng(0)
+    for _ in range(60):
+        ops = [(OPS[rng.integers(len(OPS))], int(rng.integers(8)),
+                int(rng.integers(1, CAP + 1)), int(rng.integers(3)))
+               for _ in range(120)]
+        h = _run_walk(ops)
+        # drain everything: full capacity must come back
+        for sid in list(h.bm._seqs):
+            h.free(sid)
+        for sid in list(h.snapshots):
+            h.release(sid)
+        h.check()
+        assert h.bm.free_blocks == h.bm.num_blocks
+        assert not h.bm._index and not h.bm._block_key and not h.bm._pins
+
+
+def test_share_then_free_sharers_keeps_chain_correct():
+    """Deterministic regression: A registers, B+C share, A frees — the
+    chain must survive via B/C's refs and still be matchable; then B
+    evicts (pinning the still-shared leading run; its privately-owned
+    third block is released with the snapshot) and C frees — the pins
+    alone must keep the shared run alive and matchable."""
+    h = _Harness()
+    h.alloc(0, 0, 3 * BS + 1)
+    matched = h.bm.match_prefix(FAMILIES[0][:3 * BS + 1])
+    assert len(matched) == 3
+    h.share(1, 0, 3 * BS + 2)
+    h.share(2, 0, 2 * BS + 1)
+    assert [h.bm.ref_count(b) for b in matched] == [3, 3, 2]
+    h.free(0)
+    assert h.bm.match_prefix(FAMILIES[0][:3 * BS + 1]) == matched
+    h.evict(1)
+    # B's pin spans matched[:2] (still shared with C at evict time);
+    # matched[2] was private to B by then -> released with the snapshot
+    assert h.snapshots[1][0] == matched[:2]
+    h.free(2)
+    h.check()
+    assert [h.bm.ref_count(b) for b in matched] == [1, 1, 0]  # pins only
+    assert h.bm.match_prefix(FAMILIES[0][:3 * BS + 1]) == matched[:2]
+    h.resume(1)
+    assert h.bm.block_table(1)[:2] == matched[:2]
+    h.free(1)
+    h.check()
+    assert h.bm.free_blocks == h.bm.num_blocks
+
+
+def test_cow_on_shared_tail_isolates_writer():
+    """fork + append: the writer moves onto a private copy, the reader
+    keeps the original block, and the drained COW op names the pair."""
+    h = _Harness()
+    h.alloc(0, 1, BS + 2)                  # partial tail block
+    tail = h.bm.block_table(0)[-1]
+    fork_sid = 1
+    h.fork(0, fork_sid)                    # fork(src, new)
+    h.drained_cow.extend(h.bm.take_cow_ops())
+    assert h.bm.has(fork_sid)
+    assert h.bm.block_table(fork_sid)[-1] != tail     # eager tail COW
+    assert h.bm.block_table(fork_sid)[:-1] == h.bm.block_table(0)[:-1]
+    assert (tail, h.bm.block_table(fork_sid)[-1]) in h.drained_cow
+    # both may now append freely without further COW
+    before = h.bm.free_blocks
+    h.append(0)
+    h.append(fork_sid)
+    assert h.bm.free_blocks == before      # still inside their own blocks
+    h.check()
+
+
+# ---------------------------------------------------------------------------
+# hypothesis-driven walk (optional dep; CI installs it)
+# ---------------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:                         # pragma: no cover
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=120, deadline=None)
+    @given(st.lists(st.tuples(st.sampled_from(OPS), st.integers(0, 7),
+                              st.integers(1, CAP), st.integers(0, 2)),
+                    max_size=100))
+    def test_hypothesis_random_walk(ops):
+        h = _run_walk(ops)
+        for sid in list(h.bm._seqs):
+            h.free(sid)
+        for sid in list(h.snapshots):
+            h.release(sid)
+        h.check()
+        assert h.bm.free_blocks == h.bm.num_blocks
+else:                                       # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_hypothesis_random_walk():
+        pass

@@ -62,11 +62,13 @@ def _mk_reqs(now=0.0):
     return reqs
 
 
-def _run_engine(registry, reqs, submit_late=None, max_slots=4, hw=_hw):
+def _run_engine(registry, reqs, submit_late=None, max_slots=4, hw=_hw,
+                decode_burst=1):
     names = list(MODELS)
     m0, p0 = registry[names[0]]
     eng = ContinuousBatchingEngine(
-        m0, p0, EngineConfig(max_slots=max_slots, max_seq_len=64),
+        m0, p0, EngineConfig(max_slots=max_slots, max_seq_len=64,
+                             decode_burst=decode_burst),
         model_name=names[0])
     vq = VirtualQueue(0)
     agent = QLMAgent(eng, vq, registry)
@@ -197,6 +199,95 @@ def test_swa_chunk_quantum_counts_agree(registry):
     # and the RWT prefill term charges ceil(100/64) = 2 interleaved decodes
     assert hw_chunked.prefill_seconds(100) == pytest.approx(
         hw.prefill_seconds(100) + 2 * hw.decode_per_token)
+
+
+def test_burst_mode_counts_agree_and_dispatch_amortizes(registry):
+    """Burst-aware accounting (ROADMAP follow-on): the engine running
+    ``decode_burst=4`` still produces the same admission/eviction/swap
+    counts as the simulator, and threading the burst width into
+    ``HardwareProfile`` makes the simulator charge the per-dispatch host
+    overhead once per burst instead of once per iteration."""
+    reqs_e = _mk_reqs(now=time.monotonic())
+    eng, _ = _run_engine(registry, reqs_e, decode_burst=4)
+    assert all(r.finished() for r in reqs_e)
+
+    def hw_burst(burst):
+        def mk():
+            return HardwareProfile(
+                prefill_time=0.05, decode_per_token=0.02, inefficiency=1.2,
+                token_capacity=512, swap_time=0.2, model_max_tokens=64,
+                decode_burst=burst, dispatch_overhead=0.01)
+        return mk
+
+    sim1, m1 = _run_sim(_mk_reqs(), hw=hw_burst(1))
+    sim4, m4 = _run_sim(_mk_reqs(), hw=hw_burst(4))
+    # LSO counts: burst changes TIMING only, on both stacks
+    assert len(eng.completed) == int(m4["completed"]) == 8
+    assert eng.stats.evictions == int(m4["evictions"]) == 0
+    assert m4["swaps"] - 1 == eng.stats.model_swaps == 1
+    for key in ("completed", "evictions", "swaps", "preemptions"):
+        assert m1[key] == m4[key], key
+    # amortization: the same workload burns strictly less busy time when
+    # the dispatch overhead is charged once per 4-iteration burst
+    busy1 = sum(i.stats.busy_time for i in sim1.instances)
+    busy4 = sum(i.stats.busy_time for i in sim4.instances)
+    assert busy4 < busy1
+    # the per-iteration charge itself follows d + overhead / burst
+    assert hw_burst(4)().decode_seconds() == pytest.approx(0.02 + 0.01 / 4)
+    assert hw_burst(1)().decode_seconds() == pytest.approx(0.03)
+    # ... and chunk-interleaved iterations dispatch single-step
+    assert hw_burst(4)().decode_seconds(1) == pytest.approx(0.03)
+
+
+def test_calibration_threads_burst_width(registry):
+    """calibrate_from_engine carries the engine's decode_burst into the
+    profile so simulator experiments charge the measured operating mode."""
+    from repro.sim.profiles import calibrate_from_engine
+    name = MODELS[0]
+    model, params = registry[name]
+    eng = ContinuousBatchingEngine(
+        model, params, EngineConfig(max_slots=2, max_seq_len=64,
+                                    decode_burst=4),
+        model_name=name)
+    hw = calibrate_from_engine(eng, token_capacity=512,
+                               dispatch_overhead=0.005)
+    assert hw.decode_burst == 4
+    assert hw.decode_seconds() == pytest.approx(
+        hw.decode_per_token + 0.005 / 4)
+
+
+def test_effective_prefill_tokens_reflect_cache_hits():
+    """Shared-prefix cache hits shrink BOTH the RWT prefill term and the
+    simulator's prefill work/KV (Request.prefix_shared_tokens)."""
+    hw = HardwareProfile(prefill_time=0.05, decode_per_token=0.02,
+                         inefficiency=1.2, token_capacity=512, swap_time=0.2,
+                         model_max_tokens=64, prefill_chunk_tokens=16)
+    # RWT: rate AND interleaved chunk count scale with the effective tokens
+    assert hw.prefill_seconds(64, effective_prompt_tokens=16) \
+        == pytest.approx(0.05 * 16 / 1024 + 1 * 0.02)
+    assert hw.prefill_seconds(64, effective_prompt_tokens=16) \
+        < hw.prefill_seconds(64)
+    from repro.core.rwt_estimator import RWTEstimator, WorkloadProfile
+    est = RWTEstimator()
+    wl = WorkloadProfile(64.0, 1.0, 8.0, 1.0)
+    full = est.request_completion(0, wl, hw, prompt_tokens=64.0)
+    eff = est.request_completion(0, wl, hw, prompt_tokens=64.0,
+                                 effective_prompt_tokens=16.0)
+    assert eff.mean < full.mean
+
+    # simulator: prefill rounds follow the UNSHARED remainder only
+    def run_one(shared):
+        r = make_request(list(range(100)), MODELS[0], "batch1",
+                         arrival_time=0.0, max_new_tokens=2)
+        r.true_output_tokens = 2
+        r.prefix_shared_tokens = shared
+        sim = ClusterSimulator([{MODELS[0]: hw}], "qlm",
+                               traits_override={"prefill_chunk_tokens": 16})
+        sim.run([r])
+        return sim.instances[0].stats
+
+    assert run_one(0).prefill_rounds == 7      # ceil(100 / 16)
+    assert run_one(64).prefill_rounds == 3     # ceil((100 - 64) / 16)
 
 
 def test_chunked_sim_same_counts_as_lump(registry):
