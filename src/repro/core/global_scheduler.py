@@ -111,14 +111,44 @@ class GlobalScheduler:
         """Walk each VQ accumulating RWT drain estimates; violation iff some
         group's predicted completion exceeds its deadline slack (§4
         "Handling New Incoming Requests")."""
-        for inst in instances:
-            t = 0.0
+        return bool(self.violations(instances, now))
+
+    def violations(self, instances: Sequence[InstanceInfo], now: float,
+                   slo_ceiling: Optional[float] = None,
+                   inflight: Optional[Sequence[float]] = None
+                   ) -> List[InstanceInfo]:
+        """The instances whose VQ walk predicts a deadline violation.
+
+        A queued group whose model is missing from this instance's
+        ``hw_by_model`` is SKIPPED from the estimate rather than reported
+        as a violation: re-solving cannot improve a persistent
+        model/instance mismatch, so flagging it forever would make the
+        controller re-solve every cooldown tick with no possible
+        improvement (``QLMController.submit`` raises once, at submit time,
+        when no instance at all can serve the model).
+
+        ``slo_ceiling`` restricts which groups' deadlines COUNT as
+        violations (e.g. ``SLO_INTERACTIVE`` → only interactive-class
+        groups trigger) — every servable group still contributes its drain
+        time to the walk, since batch work ahead of an interactive group
+        is exactly what delays it.  The overload shedder uses this to act
+        only when *interactive* traffic is at risk.
+
+        ``inflight`` (seconds per instance, aligned with ``instances``)
+        seeds each walk with the drain time of work already RESIDENT in
+        that instance's engine slots.  The VQ alone under-predicts: a
+        queued interactive group behind an empty VQ still waits for a
+        running batch decode to free a slot.
+        """
+        out: List[InstanceInfo] = []
+        for idx, inst in enumerate(instances):
+            t = float(inflight[idx]) if inflight is not None else 0.0
             cur = inst.current_model
             for g in inst.virtual_queue.groups:
                 if g.done():
                     continue
                 if g.model not in inst.hw_by_model:
-                    return True
+                    continue  # unservable here: no estimate possible
                 hw = inst.hw(g.model)
                 if g.model != cur:
                     t += hw.swap_time
@@ -127,6 +157,8 @@ class GlobalScheduler:
                 est = self.estimator.group_drain_time(
                     len(g.pending()), wl, hw, prompt_tokens=wl.mu_input)
                 t += est.conservative(self.estimator.z)
-                if now + t > g.earliest_deadline():
-                    return True
-        return False
+                if now + t > g.earliest_deadline() \
+                        and (slo_ceiling is None or g.slo <= slo_ceiling):
+                    out.append(inst)
+                    break
+        return out

@@ -42,6 +42,11 @@ class QLMController:
         self.global_queue: List[Request] = []
         self.groups: List[RequestGroup] = []
         self.finished: List[Request] = []
+        # requests 429'd before entering the global queue (admission control
+        # / backpressure): never scheduled, but they COUNT as SLO misses —
+        # attainment over admitted requests only would reward rejecting
+        # everything hard to serve
+        self.rejected: List[Request] = []
         self._last_reschedule = -math.inf
 
     @property
@@ -51,13 +56,27 @@ class QLMController:
     # ------------------------------------------------------------------
     def submit(self, req: Request, now: float) -> None:
         """API-gateway entry: enqueue, classify into a group, reschedule if
-        the RWT estimator predicts a violation."""
+        the RWT estimator predicts a violation.
+
+        Raises ``ValueError`` when NO instance can serve ``req.model`` —
+        once, here, instead of letting ``predict_violation`` report an
+        unfixable violation every cooldown tick (solver thrash).
+        """
+        if not any(req.model in i.hw_by_model for i in self.instances):
+            raise ValueError(f"no instance can serve model {req.model}")
         self.global_queue.append(req)
         g = classify_into_groups(req, self.groups, max_group=self.max_group)
         if g is None:
             g = RequestGroup(model=req.model, slo=req.slo)
             g.add(req)
             self.groups.append(g)
+            self._place_new_group(g, now)
+        elif not self._placed(g):
+            # liveness: the group existed but is reachable from no instance
+            # (an infeasible-solve set_order/_edf_fallback dropped it, or a
+            # VQ popped it while momentarily done) — without re-placement
+            # the new request would strand in the global queue until an
+            # unrelated violation triggers a full reschedule
             self._place_new_group(g, now)
         if self.cfg.reschedule_on_arrival and \
                 now - self._last_reschedule >= self.cfg.reschedule_cooldown and \
@@ -72,6 +91,20 @@ class QLMController:
             delta=self.cfg.delta)
         self.groups.extend(new_groups)
         self.reschedule(now)
+
+    def _placed(self, g: RequestGroup) -> bool:
+        """Is ``g`` reachable from at least one instance's virtual queue?"""
+        return any(g is q for inst in self.instances
+                   for q in inst.virtual_queue.groups)
+
+    def record_rejection(self, req: Request, now: float) -> None:
+        """Admission-control / backpressure rejection (§9 option (c)):
+        the request never enters the global queue, but attainment
+        accounting must still see it as a miss."""
+        req.rejected = True
+        if req.completion_time is None:
+            req.completion_time = now
+        self.rejected.append(req)
 
     def _place_new_group(self, g: RequestGroup, now: float) -> None:
         """Cheap placement for a singleton group (full solve happens on
@@ -101,7 +134,16 @@ class QLMController:
         return self.scheduler.schedule(self.groups, self.instances, now)
 
     def tick(self, now: float) -> bool:
-        """Periodic violation check (returns True if it rescheduled)."""
+        """Periodic violation check (returns True if it rescheduled).
+
+        Respects ``reschedule_cooldown`` like the submit path: under
+        sustained overload ``predict_violation`` stays true on every tick,
+        and re-solving each time churns the VQ orders (each re-solve moves
+        group heads, firing the agents' head-change eviction LSO) without
+        any new information to act on.
+        """
+        if now - self._last_reschedule < self.cfg.reschedule_cooldown:
+            return False
         if self.scheduler.predict_violation(self.instances, now):
             self.reschedule(now)
             return True
@@ -118,8 +160,30 @@ class QLMController:
     def all_requests(self) -> List[Request]:
         return self.finished + self.global_queue
 
-    def slo_attainment(self) -> float:
-        done = [r for r in self.all_requests() if r.ttft() is not None]
-        if not done:
+    def slo_attainment(self, now: Optional[float] = None) -> float:
+        """Fraction of SCORED requests that met their TTFT SLO.
+
+        Scored = served requests (TTFT recorded) + definite misses that
+        never got a first token: admission rejections, shed/expired
+        requests, and — when ``now`` is given — requests still queued past
+        their deadline (stranded).  Counting only TTFT-recorded requests
+        silently inflates attainment exactly when the system is dropping
+        or stranding traffic.  Client cancellations without a first token
+        are excluded (the client walked away; the system didn't fail it)
+        unless the deadline had already passed.
+        """
+        scored = hits = 0
+        for r in self.all_requests() + self.rejected:
+            met = r.slo_met()
+            if met is not None:
+                scored += 1
+                hits += int(met)
+                continue
+            # no first token ever recorded
+            if r.rejected or r.expired or r.shed:
+                scored += 1          # dropped without service: miss
+            elif now is not None and now > r.deadline:
+                scored += 1          # past deadline and still unstarted: miss
+        if scored == 0:
             return 1.0
-        return sum(1 for r in done if r.slo_met()) / len(done)
+        return hits / scored

@@ -54,6 +54,18 @@ class Request:
     # simulator consumes it as ground truth — like true_output_tokens —
     # to skip prefill work / KV for the shared leading run.
     prefix_shared_tokens: int = 0
+    # multi-turn session bookkeeping (data.workload.Session): follow-up
+    # requests re-enter the queue carrying the previous turns' tokens as a
+    # prompt prefix, so the prefix index serves real session traffic
+    session_id: Optional[int] = None
+    turn: int = 0
+    # async front-end lifecycle (serving.frontend): set by the client /
+    # server, observed by the queue layer's accounting
+    cancel_requested: bool = False   # client asked; server acts on next sweep
+    cancelled: bool = False          # cancellation executed (KV freed)
+    rejected: bool = False           # 429'd by admission control / backpressure
+    expired: bool = False            # deadline passed before any dispatch
+    shed: bool = False               # dropped by the SLO-pressure shedder
     # scheduling flag: currently in a running batch
     _in_flight: bool = False
     # chunked-prefill progress kept across evictions (simulator mirror of
@@ -88,6 +100,14 @@ class Request:
 
     def finished(self) -> bool:
         return self.completion_time is not None
+
+    def dropped(self) -> bool:
+        """Terminated without service: rejected at the door, expired past
+        its deadline unstarted, shed by the overload policy, or cancelled
+        before the first token.  A definite SLO miss (except client
+        cancellation, which is excluded from attainment accounting)."""
+        return (self.rejected or self.expired or self.shed
+                or (self.cancelled and self.first_token_time is None))
 
 
 def make_request(prompt_tokens, model: str, slo_class: str,

@@ -176,7 +176,8 @@ def create_request_groups(requests: Sequence[Request], *,
 
 
 def classify_into_groups(req: Request, groups: List[RequestGroup], *,
-                         max_group: int) -> Optional[RequestGroup]:
+                         max_group: int,
+                         slo_band: float = 2.0) -> Optional[RequestGroup]:
     """§4 "Handling New Incoming Requests": attach to the nearest existing
     compatible group with capacity, else signal that a new group is needed.
 
@@ -185,9 +186,19 @@ def classify_into_groups(req: Request, groups: List[RequestGroup], *,
     form fresh groups and get least-loaded placement (QLM == FCFS at queue
     size 0, Fig. 17's left edge); amortization via large groups only kicks
     in when a real queue exists.
+
+    ``slo_band`` bounds the SLO ratio between the request and the group it
+    may join (Algorithm 1 clusters ON the SLO feature; the incremental
+    attach path must respect the same partition).  A group's SLO is the min
+    over members, so without the band one interactive arrival attached to a
+    batch group re-deadlines the WHOLE group as interactive: the RWT walk
+    then sees hours of batch decode behind an interactive deadline
+    (violation storms), and any SLO-class queue policy — e.g. the front
+    end's interactive-first ordering — can no longer separate the classes.
     """
     candidates = [g for g in groups
                   if g.model == req.model and g.size() < max_group
+                  and max(g.slo, req.slo) <= slo_band * min(g.slo, req.slo)
                   and not g.done() and g.next_pending() is not None]
     if not candidates:
         return None

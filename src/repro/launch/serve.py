@@ -26,6 +26,66 @@ from repro.serving import ContinuousBatchingEngine, EngineConfig
 from repro.sim.profiles import calibrate_from_engine
 
 
+def build_registry(arch_names, key):
+    """name -> (Model, params) for each requested arch (reduced configs)."""
+    registry = {}
+    for name in arch_names:
+        cfg = get_arch(name).reduced()
+        model = build_model(cfg)
+        registry[name] = (model, model.init(key))
+    return registry
+
+
+def calibrate_registry(registry, ecfg: EngineConfig) -> dict:
+    """name -> HardwareProfile, each calibrated on ITS OWN model.
+
+    One throwaway engine per model: the scheduler's swap/drain estimates
+    are per (model, device) — reusing the arch-1 profile for every model
+    (the old behavior) gave the solver wrong costs for every other arch.
+    """
+    hw_by_model = {}
+    for name, (model, params) in registry.items():
+        eng = ContinuousBatchingEngine(model, params, ecfg, model_name=name)
+        hw_by_model[name] = calibrate_from_engine(
+            eng, token_capacity=ecfg.resolved_kv_blocks() * ecfg.block_size)
+    return hw_by_model
+
+
+def summarize(reqs, controller, engines, t_start: float, now: float) -> dict:
+    """Printed-stats accounting, mirroring QLMController.slo_attainment:
+    requests that never got a first token (rejected / shed / expired, or
+    still queued past their deadline at ``now``) are SLO misses, not
+    silently excluded."""
+    import numpy as np
+    served = [r for r in reqs if r.ttft() is not None]
+    dropped = [r for r in reqs if r.ttft() is None
+               and (r.dropped() or now > r.deadline)]
+    # rejections the caller's request list doesn't already cover (the
+    # async path records rejections on requests that ARE in reqs)
+    known = {id(r) for r in reqs}
+    extra_rej = [r for r in controller.rejected if id(r) not in known]
+    scored = len(served) + len(dropped) + len(extra_rej)
+    met = sum(1 for r in served if r.slo_met())
+    done_times = [r.completion_time for r in reqs if r.completion_time]
+    span = max(max(done_times, default=now) - t_start, 1e-9)
+    return {
+        "requests": len(reqs),
+        "served": len(served),
+        "rejected": len(extra_rej) + sum(1 for r in reqs if r.rejected),
+        "dropped_unserved": len(dropped),
+        "slo_attainment": met / max(scored, 1),
+        "mean_ttft_s": float(np.mean([r.ttft() for r in served]))
+        if served else float("nan"),
+        "throughput_rps": len(served) / span,
+        "evictions": sum(e.stats.evictions for e in engines),
+        "swaps": sum(e.stats.model_swaps for e in engines),
+        "tokens": sum(e.stats.tokens_generated for e in engines),
+        "prefix_hits": sum(e.stats.prefix_hits for e in engines),
+        "prefix_shared_tokens": sum(e.stats.prefix_shared_tokens
+                                    for e in engines),
+    }
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-2b")
@@ -58,27 +118,25 @@ def main(argv=None) -> dict:
 
     # model registry (reduced configs — same code path as production)
     arch_names = [args.arch] + ([args.arch2] if args.arch2 else [])
-    registry = {}
-    for name in arch_names:
-        cfg = get_arch(name).reduced()
-        model = build_model(cfg)
-        registry[name] = (model, model.init(key))
+    registry = build_registry(arch_names, key)
 
     engines, agents, infos = [], [], []
     ecfg = EngineConfig(max_slots=args.slots, max_seq_len=128,
                         decode_burst=args.decode_burst,
                         attention_backend=args.backend,
                         prefix_sharing=args.prefix_sharing)
+    # per-model hardware profiles (each arch calibrated on its own engine):
+    # the scheduler's swap/drain costs for --arch2 come from arch2's real
+    # timings, not a copy of arch-1's
+    hw_by_model = calibrate_registry(registry, ecfg)
     for i in range(args.instances):
         m0, p0 = registry[arch_names[0]]
         eng = ContinuousBatchingEngine(m0, p0, ecfg, model_name=arch_names[0])
-        hw = calibrate_from_engine(eng, token_capacity=ecfg.resolved_kv_blocks() * ecfg.block_size)
         vq = VirtualQueue(i)
         agent = QLMAgent(eng, vq, registry)
         engines.append(eng)
         agents.append(agent)
-        infos.append(InstanceInfo(i, {n: hw for n in arch_names},
-                                  eng.model_name, vq))
+        infos.append(InstanceInfo(i, dict(hw_by_model), eng.model_name, vq))
     controller = QLMController(infos, QLMConfig(avg_batch_size=args.slots))
 
     # workload
@@ -109,21 +167,7 @@ def main(argv=None) -> dict:
         if not any(e.num_active() for e in engines) and pending:
             time.sleep(min(0.01, max(0.0, pending[0].arrival_time - time.monotonic())))
 
-    ttfts = [r.ttft() for r in reqs]
-    met = sum(1 for r in reqs if r.slo_met())
-    span = max(r.completion_time for r in reqs) - t_start
-    stats = {
-        "requests": len(reqs),
-        "slo_attainment": met / len(reqs),
-        "mean_ttft_s": float(np.mean(ttfts)),
-        "throughput_rps": len(reqs) / span,
-        "evictions": sum(e.stats.evictions for e in engines),
-        "swaps": sum(e.stats.model_swaps for e in engines),
-        "tokens": sum(e.stats.tokens_generated for e in engines),
-        "prefix_hits": sum(e.stats.prefix_hits for e in engines),
-        "prefix_shared_tokens": sum(e.stats.prefix_shared_tokens
-                                    for e in engines),
-    }
+    stats = summarize(reqs, controller, engines, t_start, time.monotonic())
     for k, v in stats.items():
         print(f"{k:18s} {v:.3f}" if isinstance(v, float) else f"{k:18s} {v}")
     return stats

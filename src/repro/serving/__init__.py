@@ -1,5 +1,9 @@
 from repro.serving.engine import ContinuousBatchingEngine, EngineConfig, EngineStats
+from repro.serving.frontend import (AsyncServer, FrontendConfig,
+                                    FrontendStats, RequestStream, run_session)
 from repro.serving.kv_cache import BlockManager, OutOfBlocksError
 
 __all__ = ["ContinuousBatchingEngine", "EngineConfig", "EngineStats",
-           "BlockManager", "OutOfBlocksError"]
+           "BlockManager", "OutOfBlocksError",
+           "AsyncServer", "FrontendConfig", "FrontendStats", "RequestStream",
+           "run_session"]

@@ -84,6 +84,28 @@ Backend support matrix (rows = engine capabilities; see
 Dense cache pytrees have layout (layers/sites, batch, ...), so slot insert
 / extract are uniform ``tree_map``s over axis 1; paged caches have no
 batch axis and are extracted/restored by page id instead.
+
+**Cancellation contract** (``cancel_request`` / ``shed_slots`` — the async
+front end's hooks, ``serving.frontend``):
+
+  * ``cancel_request(req)`` terminates ``req`` wherever it lives: a
+    resident slot is freed mid-decode or mid-prefill (pending COW copies
+    are applied first so no queued page copy can land on a page the free
+    list hands to a later admission), an eviction snapshot is discarded
+    (releasing any shared-prefix pins on its source pool), and a request
+    the engine has never seen is a no-op returning False.  On success the
+    request is marked ``cancelled`` with ``completion_time`` stamped, its
+    KV blocks are back on the free list (shared blocks: its refcount is
+    dropped; the pages live on for the other sharers / the prefix index),
+    and the slot is immediately admittable.  Cancellation between the
+    dispatch that produced a token and the host sync that records it is
+    safe: the hook runs on the orchestrator thread between ``steps()``
+    calls, never concurrently with a dispatch.
+  * ``shed_slots(should_shed, drop=)`` applies a predicate over the
+    running batch: matching slots are EVICTED (snapshot to host, resumable
+    later — ``drop=False``, the deferral policy) or CANCELLED outright
+    (``drop=True``); the returned requests have ``_in_flight`` cleared so
+    the virtual-queue owner can re-pull or account them.
 """
 from __future__ import annotations
 
@@ -205,6 +227,9 @@ class EngineStats:
     prompt_tokens_admitted: int = 0  # denominator for the hit-rate counters
     cow_copies: int = 0            # copy-on-write page copies applied
     forks: int = 0                 # fork_slot clones
+    # async front-end hooks (frontend cancellation / overload shedding)
+    cancellations: int = 0         # cancel_request frees (slot or snapshot)
+    sheds: int = 0                 # shed_slots evict/drop actions
 
 
 class ContinuousBatchingEngine:
@@ -239,7 +264,12 @@ class ContinuousBatchingEngine:
                     "(prefill_chunk_tokens > 0): the legacy single-shot "
                     "path writes per-slot dense caches")
 
-        self.block_mgr = BlockManager(cfg.resolved_kv_blocks(), cfg.block_size)
+        # prefix sharing keeps freed-but-indexed blocks cached so follow-up
+        # turns (same leading tokens, submitted after the original request
+        # finished) still match the chain
+        self.block_mgr = BlockManager(cfg.resolved_kv_blocks(),
+                                      cfg.block_size,
+                                      cache_freed=self.prefix_sharing)
         if cfg.incremental_block_table:
             self.block_mgr.attach_slot_table(cfg.max_slots,
                                              cfg.max_blocks_per_seq())
@@ -602,9 +632,13 @@ class ContinuousBatchingEngine:
                 return False
             shared_blocks = len(pins or ())
         elif self.prefix_sharing and self._use_chunked(req.extras or {}):
-            # admission-time prefix match: indexed chains arrive from the
-            # pool, not the free list
-            shared_blocks = len(self.block_mgr.match_prefix(req.prompt_tokens))
+            # admission-time prefix match: LIVE indexed chains arrive from
+            # the pool, not the free list.  Freed-but-cached matches (ref 0)
+            # don't count — share_prefix revives them OUT of the allocatable
+            # pool, so capacity-wise they cost as much as a fresh block.
+            shared_blocks = sum(
+                1 for b in self.block_mgr.match_prefix(req.prompt_tokens)
+                if self.block_mgr.ref_count(b) >= 1)
         if snap is not None \
                 and snap.get("prefill_pos", req.prompt_len) >= req.prompt_len:
             # decode-phase resume: only the snapshotted tokens plus the next
@@ -846,6 +880,72 @@ class ContinuousBatchingEngine:
     def flush(self) -> List[Request]:
         """Evict everything (used before a model swap)."""
         return [self.evict_slot(i) for i in self.active_slots()]
+
+    # ------------------------------------------------------------------
+    # cancellation + shedding hooks (async front end; contract in the
+    # module docstring)
+    # ------------------------------------------------------------------
+    def _cancel_slot(self, slot: int) -> Request:
+        """Free a resident slot WITHOUT a snapshot: the request is done
+        (cancelled), so its KV pages go straight back to the free list.
+        Pending COW copies must land first — a queued (src, dst) page copy
+        whose dst this free releases would otherwise overwrite a page a
+        later admission already owns."""
+        req = self.slots[slot]
+        assert req is not None, slot
+        if self.paged:
+            self._apply_cow()
+        self.block_mgr.free(req.req_id)
+        self.slots[slot] = None
+        self.lengths[slot] = 0
+        self.prefill_pos[slot] = 0
+        req._in_flight = False
+        req.cancelled = True
+        if req.completion_time is None:
+            req.completion_time = self.clock()
+        self.stats.cancellations += 1
+        return req
+
+    def cancel_request(self, req: Request) -> bool:
+        """Terminate ``req`` wherever it lives in THIS engine: resident
+        slot (freed mid-decode/mid-prefill) or eviction snapshot
+        (discarded, shared-prefix pins released).  Returns False when the
+        engine holds no state for it (still queued elsewhere — the caller
+        marks it cancelled itself)."""
+        for i, r in enumerate(self.slots):
+            if r is not None and r.req_id == req.req_id:
+                self._cancel_slot(i)
+                return True
+        if req.snapshot is not None:
+            self._discard_snapshot(req)
+            req.cancelled = True
+            if req.completion_time is None:
+                req.completion_time = self.clock()
+            self.stats.cancellations += 1
+            return True
+        return False
+
+    def shed_slots(self, should_shed: Callable[[Request], bool],
+                   drop: bool = False) -> List[Request]:
+        """Overload shedding over the running batch: every active slot
+        whose request matches ``should_shed`` is evicted (``drop=False``:
+        snapshot to host, resumable when pressure clears) or cancelled
+        outright (``drop=True``: KV freed, ``req.shed`` marked).  Returns
+        the shed requests with ``_in_flight`` cleared."""
+        out: List[Request] = []
+        for i in list(self.active_slots()):
+            req = self.slots[i]
+            if req is None or not should_shed(req):
+                continue
+            if drop:
+                self._cancel_slot(i)
+                req.shed = True
+            else:
+                self.evict_slot(i)
+                req._in_flight = False
+            self.stats.sheds += 1
+            out.append(req)
+        return out
 
     def _materialize_pinned_snapshots(self) -> None:
         """Promote every still-live pinned snapshot to a self-contained one:
@@ -1214,13 +1314,24 @@ class ContinuousBatchingEngine:
         is handed back to the virtual-queue owner via take_pushback()."""
         if self.pull_source is None:
             return
-        while self._pushback is None:
-            if self._free_slot() is None:
-                break
+        # NOTE: the loop must keep calling pull_source even after a past
+        # refusal — taking the pushback back into the queue happens inside
+        # the puller (lso._pull), so gating the loop on `_pushback is None`
+        # would freeze admission forever after the first refusal
+        while self._free_slot() is not None:
             req = self.pull_source()
             if req is None:
                 break
             if not self.admit(req):
+                # pool-pressure valve: evicted requests' snapshot pins can
+                # accumulate until no admission fits (sustained shedding
+                # under overload).  Materialize the pinned snapshots —
+                # their prefix pages move to host memory and the pins are
+                # released — then retry once before pushing back.
+                if self._pinned_snapshots:
+                    self._materialize_pinned_snapshots()
+                    if self.admit(req):
+                        continue
                 self._pushback = req
                 break
 

@@ -54,6 +54,17 @@ Every physical block carries a **refcount**:
   * A block whose refcount reaches 0 is deregistered from the prefix
     index and returned to the free list — it can never be reached through
     a stale chain afterwards (the index only ever names live blocks).
+  * **Freed-block cache** (``cache_freed=True``, off by default): an
+    indexed block whose refcount reaches 0 stays in the prefix index on a
+    free-but-cached LRU list instead of being deregistered, so a LATER
+    request with the same leading tokens (a multi-turn session's follow-up
+    carrying the previous turn as its prompt prefix) still matches after
+    the original sequence finished.  Cached blocks count as free capacity:
+    allocation evicts the LRU cached subtree on demand (descendants of a
+    cached block are themselves cached — refcounts are non-increasing
+    along a chain — and are dropped with it so a reused physical id can
+    never alias stale content), and ``share_prefix`` revives matched
+    cached blocks back to refcount 1 with zero copies.
 
 The manager can additionally maintain an **incremental slot table**
 (``attach_slot_table``): a persistent fixed-shape ``(rows, width)`` int32
@@ -68,6 +79,7 @@ private blocks, which COW guarantees.
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -92,13 +104,17 @@ class SeqAlloc:
 
 class BlockManager:
     def __init__(self, num_blocks: int, block_size: int = 16,
-                 watermark: float = 0.01):
+                 watermark: float = 0.01, cache_freed: bool = False):
         assert num_blocks > 0 and block_size > 0
         self.num_blocks = num_blocks
         self.block_size = block_size
+        self.cache_freed = cache_freed
         # reserve a small watermark so decode appends don't immediately OOM
         self.watermark_blocks = max(1, int(num_blocks * watermark))
         self._free: List[int] = list(range(num_blocks))
+        # freed-but-indexed blocks (cache_freed): LRU insertion order,
+        # evicted on demand by _acquire, revived by share_prefix
+        self._cached: "OrderedDict[int, None]" = OrderedDict()
         self._seqs: Dict[int, SeqAlloc] = {}
         # per-block reference counts: 0 = free, 1 = sole owner, >1 = shared
         self._ref = np.zeros(num_blocks, np.int32)
@@ -190,11 +206,17 @@ class BlockManager:
 
     @property
     def free_blocks(self) -> int:
-        return len(self._free)
+        """Allocatable blocks: the free list plus the freed-but-cached
+        blocks (evictable on demand, so they ARE capacity)."""
+        return len(self._free) + len(self._cached)
+
+    @property
+    def cached_blocks(self) -> int:
+        return len(self._cached)
 
     @property
     def used_blocks(self) -> int:
-        return self.num_blocks - len(self._free)
+        return self.num_blocks - self.free_blocks
 
     def tokens_allocated(self) -> int:
         return sum(s.num_tokens for s in self._seqs.values())
@@ -216,27 +238,58 @@ class BlockManager:
         prefix index (or a pinned snapshot) instead of the free list."""
         need = max(self.blocks_needed(num_tokens) - shared_blocks, 0)
         reserve = self.watermark_blocks if respect_watermark else 0
-        return need <= len(self._free) - reserve - reserve_blocks
+        return need <= self.free_blocks - reserve - reserve_blocks
 
     # ------------------------------------------------------------------
     # block acquisition / release
     # ------------------------------------------------------------------
     def _acquire(self, n: int) -> List[int]:
-        blocks = [self._free.pop() for _ in range(n)]
-        for b in blocks:
+        blocks = []
+        for _ in range(n):
+            b = self._free.pop() if self._free else self._evict_cached()
             assert self._ref[b] == 0, (b, self._ref[b])
             self._ref[b] = 1
+            blocks.append(b)
         return blocks
+
+    def _evict_cached(self) -> int:
+        """Reclaim the LRU freed-but-cached block for allocation."""
+        block, _ = self._cached.popitem(last=False)
+        self._deregister(block)
+        return block
+
+    def _deregister(self, block: int) -> None:
+        """Remove ``block`` from the prefix index, and with it every
+        indexed DESCENDANT: their keys chain through this physical id,
+        which is about to become reusable — a reused id must never alias
+        stale content.  Descendants of a cached block are cached too
+        (refcounts are non-increasing along a chain), so the subtree walk
+        moves them from the cache to the plain free list."""
+        key = self._block_key.pop(block, None)
+        if key is None or self._index.get(key) != block:
+            return
+        del self._index[key]
+        children = [b for (parent, _toks), b in self._index.items()
+                    if parent == block]
+        for c in children:
+            if c in self._cached:
+                del self._cached[c]
+                self._free.append(c)
+            self._deregister(c)
 
     def _release_block(self, block: int) -> None:
         """Drop one reference; at zero the block is deregistered from the
-        prefix index and returned to the free list."""
+        prefix index and returned to the free list — or, with
+        ``cache_freed``, kept indexed on the cached LRU list so later
+        same-prefix admissions still match it."""
         assert self._ref[block] >= 1, block
         self._ref[block] -= 1
         if self._ref[block] == 0:
-            key = self._block_key.pop(block, None)
-            if key is not None and self._index.get(key) == block:
-                del self._index[key]
+            if self.cache_freed \
+                    and self._index.get(self._block_key.get(block)) == block:
+                self._cached[block] = None
+                return
+            self._deregister(block)
             self._free.append(block)
 
     # ------------------------------------------------------------------
@@ -258,9 +311,9 @@ class BlockManager:
             raise KeyError(f"seq {seq_id} already allocated")
         need = self.blocks_needed(num_tokens)
         reserve = self.watermark_blocks if respect_watermark else 0
-        if need > len(self._free) - reserve:
+        if need > self.free_blocks - reserve:
             raise OutOfBlocksError(
-                f"need {need} blocks, {len(self._free)} free"
+                f"need {need} blocks, {self.free_blocks} free"
                 + (f" ({reserve} reserved by watermark)" if reserve else ""))
         blocks = self._acquire(need)
         self._seqs[seq_id] = SeqAlloc(block_table=blocks, num_tokens=num_tokens)
@@ -314,7 +367,7 @@ class BlockManager:
             return True
         need = self.blocks_needed(num_tokens) - len(alloc.block_table)
         cow = self._write_needs_cow(alloc)
-        if need + (1 if cow else 0) > len(self._free):
+        if need + (1 if cow else 0) > self.free_blocks:
             return False
         if cow:
             self._cow(seq_id, len(alloc.block_table) - 1)
@@ -331,13 +384,13 @@ class BlockManager:
         must preempt)."""
         alloc = self._seqs[seq_id]
         if alloc.num_tokens % self.block_size == 0:
-            if not self._free:
+            if not self.free_blocks:
                 return False
             alloc.block_table.append(self._acquire(1)[0])
             self._table_append(seq_id, alloc.block_table[-1:],
                                len(alloc.block_table) - 1)
         elif self._write_needs_cow(alloc):
-            if not self._free:
+            if not self.free_blocks:
                 return False
             self._cow(seq_id, len(alloc.block_table) - 1)
         alloc.num_tokens += 1
@@ -361,6 +414,7 @@ class BlockManager:
 
     def reset(self) -> None:
         self._free = list(range(self.num_blocks))
+        self._cached.clear()
         self._seqs.clear()
         self._seq_rows.clear()
         self._ref[:] = 0
@@ -441,13 +495,22 @@ class BlockManager:
         need = self.blocks_needed(num_tokens) - len(shared)
         assert need >= 0, (num_tokens, len(shared))
         reserve = self.watermark_blocks if respect_watermark else 0
-        if need > len(self._free) - reserve:
+        # cached matched blocks are revived (leave the allocatable pool)
+        # rather than consumed, so they reduce capacity without reducing
+        # need — same arithmetic the engine's can_allocate uses when it
+        # counts only live matched blocks as shared
+        cached_shared = sum(1 for b in shared if self._ref[b] == 0)
+        if need > self.free_blocks - cached_shared - reserve:
             raise OutOfBlocksError(
-                f"need {need} fresh blocks, {len(self._free)} free"
+                f"need {need} fresh blocks, "
+                f"{self.free_blocks - cached_shared} free"
                 + (f" ({reserve} reserved by watermark)" if reserve else ""))
         for b in shared:
-            assert self._ref[b] >= 1, b
-            self._ref[b] += 1
+            if self._ref[b] == 0:       # revive from the freed-block cache
+                del self._cached[b]
+                self._ref[b] = 1
+            else:
+                self._ref[b] += 1
         blocks = shared + self._acquire(need)
         self._seqs[seq_id] = SeqAlloc(block_table=blocks,
                                       num_tokens=num_tokens,
@@ -464,7 +527,7 @@ class BlockManager:
         src = self._seqs[src_seq_id]
         tail_partial = bool(src.block_table) \
             and src.num_tokens % self.block_size != 0
-        if tail_partial and not self._free:
+        if tail_partial and not self.free_blocks:
             raise OutOfBlocksError("fork needs one free block for the COW "
                                    "copy of the partial tail block")
         for b in src.block_table:
@@ -526,9 +589,9 @@ class BlockManager:
         need = self.blocks_needed(num_tokens) - len(pinned)
         assert need >= 0, (num_tokens, len(pinned))
         reserve = self.watermark_blocks if respect_watermark else 0
-        if need > len(self._free) - reserve:
+        if need > self.free_blocks - reserve:
             raise OutOfBlocksError(
-                f"need {need} fresh blocks, {len(self._free)} free"
+                f"need {need} fresh blocks, {self.free_blocks} free"
                 + (f" ({reserve} reserved by watermark)" if reserve else ""))
         for b in pinned:
             self._pins[b] -= 1
