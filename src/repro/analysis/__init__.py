@@ -1,0 +1,29 @@
+"""qlint: static analysis + runtime invariant checking for the serving
+stack.
+
+Two cooperating layers:
+
+  * ``repro.analysis.lint`` — an AST-based static pass with JAX/Pallas
+    specific rules (host syncs in the device-resident hot loop, buffer
+    donation misuse, retrace hazards, blocking calls in coroutines,
+    traced-value branches in Pallas kernel bodies, unguarded ratio
+    statistics).  CLI: ``python -m repro.analysis.lint src/``.
+  * ``repro.analysis.invariants`` — a runtime checker for the
+    ``BlockManager`` / engine / queue-layer invariants the static rules
+    cannot see, callable at engine round boundaries and controller
+    ticks; enabled via ``EngineConfig.debug_invariants`` or
+    ``QLINT_INVARIANTS=1``.
+
+See ``docs/analysis.md`` for the rule catalogue and waiver syntax.
+"""
+from repro.analysis.invariants import (InvariantViolation,
+                                       check_block_manager, check_engine,
+                                       check_queue_layer, invariants_enabled)
+
+__all__ = [
+    "InvariantViolation",
+    "check_block_manager",
+    "check_engine",
+    "check_queue_layer",
+    "invariants_enabled",
+]

@@ -1,0 +1,900 @@
+"""qlint — AST-based static analysis for the JAX/Pallas serving stack.
+
+CLI::
+
+    python -m repro.analysis.lint src/ [--json report.json]
+        [--baseline qlint_baseline.json] [--write-baseline] [--self-test]
+
+Rules (see ``docs/analysis.md`` for the full catalogue):
+
+  host-sync-in-hot-path   device syncs (.item(), np.asarray, float()/int()
+                          on jit outputs, jax.device_get, block_until_ready)
+                          inside functions reachable from the engine round
+                          entry points (steps/step/_decode_round/
+                          _prefill_chunk_round/_decode_burst_round)
+  use-after-donate        reading a name passed at a donate_argnums
+                          position after the jitted call without rebinding
+  retrace-hazard          unhashable / per-call-varying values at static
+                          arg positions; jax.jit called inside a loop
+  blocking-in-async       time.sleep, sync engine/agent calls, blocking
+                          queue.Queue ops inside ``async def``
+  pallas-traced-branch    Python ``if`` on a traced value inside a Pallas
+                          kernel body (kernels/*.py)
+  unguarded-div           ratio statistics dividing by a possibly-zero
+                          counter without a guard
+  waiver-missing-reason   a ``# qlint: disable=`` comment without
+                          ``-- <reason>`` (waivers must be justified)
+
+Waivers: ``# qlint: disable=<rule>[,rule] -- <reason>`` on the offending
+line, or on its own line directly above.  The baseline file (JSON list of
+fingerprints) makes the gate *zero NEW findings*; fingerprints are
+line-number-free (``rule|path|message``) so unrelated edits don't churn
+it.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import hashlib
+import json
+import os
+import re
+import sys
+import tokenize
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+RULES = {
+    "host-sync-in-hot-path":
+        "host/device sync inside the engine's hot round loop",
+    "use-after-donate":
+        "donated buffer read after the jitted call without rebinding",
+    "retrace-hazard":
+        "jit static-arg value that forces recompilation every call",
+    "blocking-in-async":
+        "blocking call inside a coroutine",
+    "pallas-traced-branch":
+        "Python `if` on a traced value in a Pallas kernel body",
+    "unguarded-div":
+        "ratio statistic dividing by a possibly-zero counter",
+    "waiver-missing-reason":
+        "qlint waiver without a stated reason",
+}
+
+HOT_ENTRIES = {"step", "steps", "_decode_round", "_prefill_chunk_round",
+               "_decode_burst_round"}
+HOT_ANCHORS = {"_decode_round", "_prefill_chunk_round"}
+
+_COUNTERISH = re.compile(
+    r"(count|total|scored|served|reject|complet|finish|sample|request|"
+    r"tick|round|seen|done|queued|pending|arrived|attempt|admitted|shed|"
+    r"expired|cancel)", re.I)
+
+_WAIVER_RE = re.compile(
+    r"#\s*qlint:\s*disable=([A-Za-z0-9_\-, ]+?)\s*(?:--\s*(.*\S))?\s*$")
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+    waived: bool = False
+    waive_reason: str = ""
+    baselined: bool = False
+
+    @property
+    def fingerprint(self) -> str:
+        raw = f"{self.rule}|{self.path}|{self.message}"
+        return hashlib.sha1(raw.encode()).hexdigest()[:12]
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["fingerprint"] = self.fingerprint
+        return d
+
+    def render(self) -> str:
+        tag = ""
+        if self.waived:
+            tag = f"  [waived: {self.waive_reason}]"
+        elif self.baselined:
+            tag = "  [baselined]"
+        return (f"{self.path}:{self.line}:{self.col}: {self.rule}: "
+                f"{self.message}{tag}")
+
+
+# ---------------------------------------------------------------------------
+# small AST helpers
+# ---------------------------------------------------------------------------
+def _dotted(node: ast.AST) -> Optional[str]:
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _own_walk(fn: ast.AST) -> Iterable[ast.AST]:
+    """Walk a function body without descending into nested defs."""
+    stack: List[ast.AST] = [fn]
+    while stack:
+        node = stack.pop()
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if node is not fn and isinstance(
+                    child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node is fn and child is not fn:
+                continue
+            stack.append(child)
+
+
+def _write_targets(t: ast.AST) -> List[str]:
+    if isinstance(t, ast.Name):
+        return [t.id]
+    if isinstance(t, ast.Attribute):
+        d = _dotted(t)
+        return [d] if d else []
+    if isinstance(t, (ast.Tuple, ast.List)):
+        out: List[str] = []
+        for e in t.elts:
+            out.extend(_write_targets(e))
+        return out
+    if isinstance(t, ast.Starred):
+        return _write_targets(t.value)
+    return []  # Subscript store mutates, doesn't rebind
+
+
+class FileCtx:
+    def __init__(self, path: str, rel: str, source: str):
+        self.path = path
+        self.rel = rel
+        self.source = source
+        self.tree = ast.parse(source, filename=path)
+        self.parents: Dict[int, ast.AST] = {}
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                self.parents[id(child)] = node
+        self.aliases: Dict[str, str] = {}
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.aliases[a.asname or a.name.split(".")[0]] = a.name
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    self.aliases[a.asname or a.name] = \
+                        f"{node.module}.{a.name}"
+        self.waivers: Dict[int, Tuple[Set[str], str]] = {}
+        self.findings: List[Finding] = []
+        self._collect_waivers()
+
+    def _collect_waivers(self) -> None:
+        try:
+            toks = list(tokenize.generate_tokens(
+                iter(self.source.splitlines(True)).__next__))
+        except tokenize.TokenizeError:
+            return
+        for tok in toks:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = _WAIVER_RE.search(tok.string)
+            if not m:
+                continue
+            line = tok.start[0]
+            rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+            reason = (m.group(2) or "").strip()
+            if not reason:
+                self.add("waiver-missing-reason", line, tok.start[1],
+                         "waiver must state a reason: "
+                         "`# qlint: disable=<rule> -- <why>`")
+                continue
+            standalone = self.source.splitlines()[line - 1].lstrip() \
+                .startswith("#")
+            target = line + 1 if standalone else line
+            self.waivers.setdefault(target, (set(), reason))[0].update(rules)
+            if not standalone:
+                # trailing comment also covers a continuation line
+                self.waivers.setdefault(line, (rules, reason))
+
+    def resolve(self, dotted: Optional[str]) -> Optional[str]:
+        if not dotted:
+            return None
+        head, _, rest = dotted.partition(".")
+        head = self.aliases.get(head, head)
+        return f"{head}.{rest}" if rest else head
+
+    def add(self, rule: str, line: int, col: int, message: str) -> None:
+        f = Finding(rule, self.rel, line, col, message)
+        waiver = self.waivers.get(line)
+        if waiver and rule in waiver[0] and rule != "waiver-missing-reason":
+            f.waived, f.waive_reason = True, waiver[1]
+        self.findings.append(f)
+
+
+# ---------------------------------------------------------------------------
+# linear execution-order events (for use-after-donate and guard checks)
+# ---------------------------------------------------------------------------
+def _expr_events(ctx: FileCtx, e: ast.AST,
+                 jitted: Dict[str, Set[int]]) -> Iterable[tuple]:
+    reads: List[tuple] = []
+    calls: List[tuple] = []
+    for n in ast.walk(e):
+        if isinstance(n, (ast.Name, ast.Attribute)) \
+                and isinstance(getattr(n, "ctx", None), ast.Load):
+            d = _dotted(n)
+            if d:
+                reads.append(("read", d, n))
+        if isinstance(n, ast.Call):
+            fd = _dotted(n.func)
+            if fd in jitted:
+                keys = []
+                for pos in sorted(jitted[fd]):
+                    if pos < len(n.args):
+                        k = _dotted(n.args[pos])
+                        if k:
+                            keys.append(k)
+                calls.append(("donate", keys, n))
+    yield from reads
+    yield from calls
+
+
+def _linear(ctx: FileCtx, stmts: Sequence[ast.stmt],
+            jitted: Dict[str, Set[int]]) -> Iterable[tuple]:
+    for s in stmts:
+        if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                          ast.ClassDef)):
+            continue
+        if isinstance(s, ast.Assign):
+            yield from _expr_events(ctx, s.value, jitted)
+            for t in s.targets:
+                for k in _write_targets(t):
+                    yield ("write", k, s)
+        elif isinstance(s, ast.AnnAssign) and s.value is not None:
+            yield from _expr_events(ctx, s.value, jitted)
+            for k in _write_targets(s.target):
+                yield ("write", k, s)
+        elif isinstance(s, ast.AugAssign):
+            yield from _expr_events(ctx, s.value, jitted)
+            yield from _expr_events(ctx, s.target, jitted)
+            for k in _write_targets(s.target):
+                yield ("write", k, s)
+        elif isinstance(s, (ast.Expr, ast.Return, ast.Raise, ast.Assert,
+                            ast.Delete, ast.Await)):
+            for field in ast.iter_child_nodes(s):
+                yield from _expr_events(ctx, field, jitted)
+        elif isinstance(s, ast.If):
+            yield from _expr_events(ctx, s.test, jitted)
+            yield from _linear(ctx, s.body, jitted)
+            yield from _linear(ctx, s.orelse, jitted)
+        elif isinstance(s, (ast.For, ast.AsyncFor)):
+            yield from _expr_events(ctx, s.iter, jitted)
+            for k in _write_targets(s.target):
+                yield ("write", k, s)
+            yield from _linear(ctx, s.body, jitted)
+            yield from _linear(ctx, s.orelse, jitted)
+        elif isinstance(s, ast.While):
+            yield from _expr_events(ctx, s.test, jitted)
+            yield from _linear(ctx, s.body, jitted)
+            yield from _linear(ctx, s.orelse, jitted)
+        elif isinstance(s, (ast.With, ast.AsyncWith)):
+            for item in s.items:
+                yield from _expr_events(ctx, item.context_expr, jitted)
+                if item.optional_vars is not None:
+                    for k in _write_targets(item.optional_vars):
+                        yield ("write", k, s)
+            yield from _linear(ctx, s.body, jitted)
+        elif isinstance(s, ast.Try):
+            yield from _linear(ctx, s.body, jitted)
+            for h in s.handlers:
+                yield from _linear(ctx, h.body, jitted)
+            yield from _linear(ctx, s.orelse, jitted)
+            yield from _linear(ctx, s.finalbody, jitted)
+
+
+# ---------------------------------------------------------------------------
+# rule: host-sync-in-hot-path
+# ---------------------------------------------------------------------------
+def _module_functions(tree: ast.Module) -> Dict[str, ast.FunctionDef]:
+    return {n.name: n for n in tree.body if isinstance(n, ast.FunctionDef)}
+
+
+def _called_names(fn: ast.AST) -> Tuple[Set[str], Set[str]]:
+    """(self-method names, bare function names) called from fn."""
+    methods: Set[str] = set()
+    bare: Set[str] = set()
+    for n in _own_walk(fn):
+        if not isinstance(n, ast.Call):
+            continue
+        f = n.func
+        if isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name) \
+                and f.value.id == "self":
+            methods.add(f.attr)
+        elif isinstance(f, ast.Name):
+            bare.add(f.id)
+    return methods, bare
+
+
+def rule_host_sync(ctx: FileCtx) -> None:
+    mod_fns = _module_functions(ctx.tree)
+    for cls in ast.walk(ctx.tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        methods = {n.name: n for n in cls.body
+                   if isinstance(n, ast.FunctionDef)}
+        if not (HOT_ANCHORS & set(methods)):
+            continue
+        # BFS over self-calls + bare module-function calls
+        hot: Dict[int, Tuple[str, ast.FunctionDef]] = {}
+        work = [methods[m] for m in HOT_ENTRIES & set(methods)]
+        for fn in work:
+            hot[id(fn)] = (fn.name, fn)
+        while work:
+            fn = work.pop()
+            m_calls, b_calls = _called_names(fn)
+            for name in m_calls:
+                tgt = methods.get(name)
+                if tgt is not None and id(tgt) not in hot:
+                    hot[id(tgt)] = (name, tgt)
+                    work.append(tgt)
+            for name in b_calls:
+                tgt = mod_fns.get(name)
+                if tgt is not None and id(tgt) not in hot:
+                    hot[id(tgt)] = (name, tgt)
+                    work.append(tgt)
+        for name, fn in list(hot.values()):
+            _scan_hot_fn(ctx, name, fn)
+
+
+def _scan_hot_fn(ctx: FileCtx, name: str, fn: ast.FunctionDef) -> None:
+    # names holding jit outputs / device arrays (local dataflow)
+    device: Set[str] = set()
+    for n in _own_walk(fn):
+        if isinstance(n, ast.Assign) and isinstance(n.value, ast.Call):
+            fd = _dotted(n.value.func) or ""
+            rd = ctx.resolve(fd) or ""
+            if (fd.startswith("self._") and fd.endswith("_fn")) \
+                    or rd.startswith("jax."):
+                for t in n.targets:
+                    for k in _write_targets(t):
+                        device.add(k)
+    where = f"in hot-path function `{name}`"
+    for n in _own_walk(fn):
+        if not isinstance(n, ast.Call):
+            continue
+        f = n.func
+        rd = ctx.resolve(_dotted(f)) or ""
+        if isinstance(f, ast.Attribute) and f.attr == "item" and not n.args:
+            ctx.add("host-sync-in-hot-path", n.lineno, n.col_offset,
+                    f".item() forces a device->host sync {where}")
+        elif isinstance(f, ast.Attribute) and f.attr == "block_until_ready":
+            ctx.add("host-sync-in-hot-path", n.lineno, n.col_offset,
+                    f"block_until_ready() blocks on the device {where}")
+        elif rd in ("numpy.asarray", "numpy.array"):
+            ctx.add("host-sync-in-hot-path", n.lineno, n.col_offset,
+                    f"{rd}() copies device memory to host {where}")
+        elif rd in ("jax.device_get", "jax.block_until_ready"):
+            ctx.add("host-sync-in-hot-path", n.lineno, n.col_offset,
+                    f"{rd}() forces a device->host sync {where}")
+        elif isinstance(f, ast.Name) and f.id in ("float", "int") \
+                and len(n.args) == 1:
+            k = _dotted(n.args[0])
+            if k in device:
+                ctx.add("host-sync-in-hot-path", n.lineno, n.col_offset,
+                        f"{f.id}({k}) forces a device->host sync on a jit "
+                        f"output {where}")
+
+
+# ---------------------------------------------------------------------------
+# rule: use-after-donate + retrace-hazard (shared jit collection)
+# ---------------------------------------------------------------------------
+def _const_positions(e: Optional[ast.AST],
+                     env: Dict[str, ast.AST]) -> Optional[Set[int]]:
+    if e is None:
+        return None
+    if isinstance(e, ast.Name) and e.id in env:
+        return _const_positions(env[e.id], env)
+    if isinstance(e, ast.Constant) and isinstance(e.value, int):
+        return {e.value}
+    if isinstance(e, ast.Tuple):
+        out: Set[int] = set()
+        for x in e.elts:
+            if isinstance(x, ast.Constant) and isinstance(x.value, int):
+                out.add(x.value)
+            else:
+                return None
+        return out
+    if isinstance(e, ast.IfExp):
+        a = _const_positions(e.body, env)
+        b = _const_positions(e.orelse, env)
+        if a is None or b is None:
+            return None
+        return a | b
+    return None
+
+
+def _collect_jits(ctx: FileCtx):
+    donated: Dict[str, Set[int]] = {}
+    static: Dict[str, Set[int]] = {}
+    for fn in ast.walk(ctx.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.Module)):
+            continue
+        env: Dict[str, ast.AST] = {}
+        body = fn.body if not isinstance(fn, ast.Module) else fn.body
+        for n in _own_walk(fn) if not isinstance(fn, ast.Module) else body:
+            if isinstance(n, ast.Assign) and len(n.targets) == 1 \
+                    and isinstance(n.targets[0], ast.Name):
+                env[n.targets[0].id] = n.value
+        for n in (_own_walk(fn) if not isinstance(fn, ast.Module)
+                  else ast.walk(ctx.tree)):
+            if not (isinstance(n, ast.Assign)
+                    and isinstance(n.value, ast.Call)):
+                continue
+            if ctx.resolve(_dotted(n.value.func)) != "jax.jit":
+                continue
+            tgt = None
+            for t in n.targets:
+                tgt = _dotted(t) or tgt
+            if not tgt:
+                continue
+            for kw in n.value.keywords:
+                pos = _const_positions(kw.value, env)
+                if kw.arg == "donate_argnums" and pos:
+                    donated[tgt] = pos
+                elif kw.arg == "static_argnums" and pos:
+                    static[tgt] = pos
+    return donated, static
+
+
+def rule_donate_and_retrace(ctx: FileCtx) -> None:
+    donated, static = _collect_jits(ctx)
+
+    # use-after-donate: per function, linear execution-order scan
+    if donated:
+        for fn in ast.walk(ctx.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            pending: Dict[str, int] = {}
+            for ev in _linear(ctx, fn.body, donated):
+                kind = ev[0]
+                if kind == "read" and ev[1] in pending:
+                    key, node = ev[1], ev[2]
+                    ctx.add("use-after-donate", node.lineno,
+                            node.col_offset,
+                            f"`{key}` was donated to the jitted call at "
+                            f"line {pending[key]} and is read before being "
+                            f"rebound — donated buffers are invalidated by "
+                            f"XLA and may alias freed memory")
+                    del pending[key]
+                elif kind == "write":
+                    pending.pop(ev[1], None)
+                elif kind == "donate":
+                    for key in ev[1]:
+                        pending[key] = ev[2].lineno
+
+    # retrace-hazard (a): unhashable / per-call values at static positions
+    for n in ast.walk(ctx.tree):
+        if not isinstance(n, ast.Call):
+            continue
+        fd = _dotted(n.func)
+        if fd in static:
+            for pos in sorted(static[fd]):
+                if pos >= len(n.args):
+                    continue
+                a = n.args[pos]
+                bad = None
+                if isinstance(a, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                                  ast.SetComp, ast.DictComp,
+                                  ast.GeneratorExp)):
+                    bad = "an unhashable container literal"
+                elif isinstance(a, ast.JoinedStr):
+                    bad = "an f-string that varies per call"
+                elif isinstance(a, ast.Call) and isinstance(a.func, ast.Name) \
+                        and a.func.id in ("list", "dict", "set"):
+                    bad = "a freshly-constructed container"
+                if bad:
+                    ctx.add("retrace-hazard", a.lineno, a.col_offset,
+                            f"static arg {pos} of `{fd}` is {bad} — every "
+                            f"call retraces (static args are compared by "
+                            f"hash/equality)")
+        # retrace-hazard (b): jax.jit inside a loop
+        if ctx.resolve(fd) == "jax.jit":
+            p = ctx.parents.get(id(n))
+            while p is not None and not isinstance(
+                    p, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Module)):
+                if isinstance(p, (ast.For, ast.While, ast.AsyncFor)):
+                    ctx.add("retrace-hazard", n.lineno, n.col_offset,
+                            "jax.jit() called inside a loop — builds a new "
+                            "traced callable (and cache entry) every "
+                            "iteration; hoist it out")
+                    break
+                p = ctx.parents.get(id(p))
+
+
+# ---------------------------------------------------------------------------
+# rule: blocking-in-async
+# ---------------------------------------------------------------------------
+def rule_blocking_in_async(ctx: FileCtx) -> None:
+    queue_objs: Set[str] = set()
+    for n in ast.walk(ctx.tree):
+        if isinstance(n, ast.Assign) and isinstance(n.value, ast.Call) \
+                and ctx.resolve(_dotted(n.value.func)) == "queue.Queue":
+            for t in n.targets:
+                queue_objs.update(_write_targets(t))
+
+    def in_executor(node: ast.AST) -> bool:
+        p = ctx.parents.get(id(node))
+        while p is not None and not isinstance(p, ast.AsyncFunctionDef):
+            if isinstance(p, ast.Call):
+                fa = p.func
+                name = fa.attr if isinstance(fa, ast.Attribute) else \
+                    getattr(fa, "id", "")
+                if name in ("run_in_executor", "to_thread"):
+                    return True
+            p = ctx.parents.get(id(p))
+        return False
+
+    for fn in ast.walk(ctx.tree):
+        if not isinstance(fn, ast.AsyncFunctionDef):
+            continue
+        for n in _own_walk(fn):
+            if not isinstance(n, ast.Call):
+                continue
+            rd = ctx.resolve(_dotted(n.func)) or ""
+            if rd == "time.sleep":
+                ctx.add("blocking-in-async", n.lineno, n.col_offset,
+                        f"time.sleep() blocks the event loop in coroutine "
+                        f"`{fn.name}` — use `await asyncio.sleep(...)`")
+                continue
+            if not isinstance(n.func, ast.Attribute):
+                continue
+            base = _dotted(n.func.value)
+            attr = n.func.attr
+            if attr in ("get", "put") and base in queue_objs \
+                    and not in_executor(n):
+                ctx.add("blocking-in-async", n.lineno, n.col_offset,
+                        f"blocking queue.Queue.{attr}() on `{base}` in "
+                        f"coroutine `{fn.name}` — use asyncio.Queue or an "
+                        f"executor")
+            elif attr in ("run_iteration", "step", "steps") and base \
+                    and re.search(r"(agent|engine)", base.split(".")[-1]) \
+                    and not in_executor(n):
+                ctx.add("blocking-in-async", n.lineno, n.col_offset,
+                        f"synchronous `{base}.{attr}()` in coroutine "
+                        f"`{fn.name}` blocks the event loop for a full "
+                        f"engine round — offload via run_in_executor or "
+                        f"keep rounds bounded")
+
+
+# ---------------------------------------------------------------------------
+# rule: pallas-traced-branch
+# ---------------------------------------------------------------------------
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+
+
+def _kernel_functions(ctx: FileCtx) -> List[ast.FunctionDef]:
+    names: Set[str] = set()
+    for n in ast.walk(ctx.tree):
+        if isinstance(n, ast.Call):
+            rd = ctx.resolve(_dotted(n.func)) or ""
+            if rd.endswith("pallas_call") and n.args:
+                a = n.args[0]
+                if isinstance(a, ast.Name):
+                    names.add(a.id)
+                elif isinstance(a, ast.Call) and a.args \
+                        and isinstance(a.args[0], ast.Name):
+                    names.add(a.args[0].id)  # functools.partial(kernel, ..)
+    out = []
+    for n in ast.walk(ctx.tree):
+        if isinstance(n, ast.FunctionDef) and (
+                n.name in names or n.name.endswith("_kernel")
+                or n.name == "kernel"):
+            out.append(n)
+    return out
+
+
+def _expr_tainted(ctx: FileCtx, e: ast.AST, tainted: Set[str]) -> bool:
+    for n in ast.walk(e):
+        if isinstance(n, ast.Name) and n.id in tainted:
+            p = ctx.parents.get(id(n))
+            # X.shape / X.ndim / X.dtype are static even on traced X
+            if isinstance(p, ast.Attribute) and p.attr in _STATIC_ATTRS:
+                continue
+            return True
+        if isinstance(n, ast.Call):
+            rd = ctx.resolve(_dotted(n.func)) or ""
+            if rd.endswith("program_id"):
+                return True
+    return False
+
+
+def rule_pallas_traced_branch(ctx: FileCtx) -> None:
+    if f"kernels{os.sep}" not in ctx.rel and "kernels/" not in ctx.rel:
+        return
+    for fn in _kernel_functions(ctx):
+        tainted = {a.arg for a in fn.args.args + fn.args.kwonlyargs
+                   if a.arg != "self"}
+
+        def scan(stmts: Sequence[ast.stmt]) -> None:
+            for s in stmts:
+                if isinstance(s, ast.Assign):
+                    is_t = _expr_tainted(ctx, s.value, tainted)
+                    for t in s.targets:
+                        for k in _write_targets(t):
+                            if "." in k:
+                                continue
+                            (tainted.add if is_t else tainted.discard)(k)
+                elif isinstance(s, ast.If):
+                    if _expr_tainted(ctx, s.test, tainted):
+                        ctx.add("pallas-traced-branch", s.lineno,
+                                s.col_offset,
+                                f"Python `if` on a traced value inside "
+                                f"Pallas kernel `{fn.name}` — tracing "
+                                f"picks ONE branch at compile time; use "
+                                f"jnp.where, pl.when, or lax.cond")
+                    scan(s.body)
+                    scan(s.orelse)
+                elif isinstance(s, (ast.For, ast.While)):
+                    scan(s.body)
+                    scan(s.orelse)
+                elif isinstance(s, ast.With):
+                    scan(s.body)
+
+        scan(fn.body)
+
+
+# ---------------------------------------------------------------------------
+# rule: unguarded-div
+# ---------------------------------------------------------------------------
+def _mentions(e: ast.AST, keys: Set[str]) -> bool:
+    for n in ast.walk(e):
+        if isinstance(n, (ast.Name, ast.Attribute)):
+            d = _dotted(n)
+            if d in keys:
+                return True
+    return False
+
+
+def _terminal(stmt_list: Sequence[ast.stmt]) -> bool:
+    return bool(stmt_list) and isinstance(
+        stmt_list[-1], (ast.Return, ast.Raise, ast.Continue, ast.Break))
+
+
+def rule_unguarded_div(ctx: FileCtx) -> None:
+    funcs = [n for n in ast.walk(ctx.tree)
+             if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+    for fn in funcs:
+        for n in _own_walk(fn):
+            if not (isinstance(n, ast.BinOp)
+                    and isinstance(n.op, (ast.Div, ast.FloorDiv))):
+                continue
+            denom = n.right
+            keys: Set[str] = set()
+            label = None
+            if isinstance(denom, (ast.Name, ast.Attribute)):
+                d = _dotted(denom)
+                if not d:
+                    continue
+                last = d.split(".")[-1]
+                if not _COUNTERISH.search(last):
+                    continue
+                label = d
+                keys = {d}
+            elif isinstance(denom, ast.Call) \
+                    and isinstance(denom.func, ast.Name) \
+                    and denom.func.id == "len" and denom.args:
+                inner = _dotted(denom.args[0])
+                if not inner:
+                    continue
+                label = f"len({inner})"
+                keys = {inner, label}
+            else:
+                continue  # max()/or-guards/arithmetic denominators are safe
+            if _div_guarded(ctx, fn, n, keys):
+                continue
+            ctx.add("unguarded-div", n.lineno, n.col_offset,
+                    f"division by possibly-zero `{label}` — guard with "
+                    f"`max({label}, 1)`, `... if {label} else ...`, or an "
+                    f"early return (zero-request / all-rejected runs hit "
+                    f"this)")
+
+
+def _div_guarded(ctx: FileCtx, fn: ast.AST, div: ast.BinOp,
+                 keys: Set[str]) -> bool:
+    # ancestor if/while/ternary whose test mentions the denominator
+    p = ctx.parents.get(id(div))
+    while p is not None and p is not fn:
+        if isinstance(p, (ast.If, ast.While, ast.IfExp)) \
+                and _mentions(p.test, keys):
+            return True
+        if isinstance(p, ast.Assert) and _mentions(p.test, keys):
+            return True
+        p = ctx.parents.get(id(p))
+    # earlier early-return guard or assert in the same function
+    for s in _own_walk(fn):
+        if getattr(s, "lineno", 10**9) >= div.lineno:
+            continue
+        if isinstance(s, ast.If) and _mentions(s.test, keys) \
+                and _terminal(s.body):
+            return True
+        if isinstance(s, ast.Assert) and _mentions(s.test, keys):
+            return True
+        if isinstance(s, ast.Assign):
+            # denom rebound through a guard: d = max(d, 1) / d = x or 1
+            tgts = {k for t in s.targets for k in _write_targets(t)}
+            if tgts & keys and (isinstance(s.value, ast.BoolOp) or (
+                    isinstance(s.value, ast.Call)
+                    and isinstance(s.value.func, ast.Name)
+                    and s.value.func.id in ("max", "min"))):
+                return True
+    return False
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+_ALL_RULES = (rule_host_sync, rule_donate_and_retrace,
+              rule_blocking_in_async, rule_pallas_traced_branch,
+              rule_unguarded_div)
+
+
+def lint_file(path: str, rel: Optional[str] = None) -> List[Finding]:
+    with open(path, encoding="utf-8") as fh:
+        source = fh.read()
+    try:
+        ctx = FileCtx(path, rel or path, source)
+    except SyntaxError as e:
+        return [Finding("syntax-error", rel or path, e.lineno or 0, 0,
+                        str(e))]
+    for rule in _ALL_RULES:
+        rule(ctx)
+    ctx.findings.sort(key=lambda f: (f.line, f.col, f.rule))
+    return ctx.findings
+
+
+def iter_py(paths: Sequence[str]) -> Iterable[str]:
+    for p in paths:
+        if os.path.isfile(p) and p.endswith(".py"):
+            yield p
+        elif os.path.isdir(p):
+            for root, dirs, files in os.walk(p):
+                dirs[:] = sorted(d for d in dirs
+                                 if d not in ("__pycache__", ".git"))
+                for f in sorted(files):
+                    if f.endswith(".py"):
+                        yield os.path.join(root, f)
+
+
+def lint_paths(paths: Sequence[str]) -> List[Finding]:
+    findings: List[Finding] = []
+    for path in iter_py(paths):
+        findings.extend(lint_file(path, os.path.relpath(path)))
+    return findings
+
+
+def _self_test(paths: Sequence[str]) -> int:
+    """Copy the tree, inject a known hot-path violation, assert nonzero."""
+    import shutil
+    import tempfile
+    engine = None
+    for path in iter_py(paths):
+        if path.replace(os.sep, "/").endswith("serving/engine.py"):
+            engine = path
+            break
+    if engine is None:
+        print("qlint self-test: no serving/engine.py under target",
+              file=sys.stderr)
+        return 1
+    with tempfile.TemporaryDirectory() as tmp:
+        dst = os.path.join(tmp, "engine.py")
+        shutil.copy(engine, dst)
+        with open(dst, encoding="utf-8") as fh:
+            lines = fh.readlines()
+        for i, line in enumerate(lines):
+            m = re.match(r"(\s*)def _decode_round\(", line)
+            if m:
+                indent = m.group(1) + "    "
+                lines.insert(
+                    i + 1, f"{indent}_injected = jax.device_get("
+                           f"self.lengths)\n")
+                break
+        else:
+            print("qlint self-test: _decode_round not found",
+                  file=sys.stderr)
+            return 1
+        with open(dst, "w", encoding="utf-8") as fh:
+            fh.writelines(lines)
+        hits = [f for f in lint_file(dst, "self-test/engine.py")
+                if f.rule == "host-sync-in-hot-path" and not f.waived
+                and "_injected" not in f.message and f.line > 0
+                and "device_get" in f.message]
+    if hits:
+        print(f"qlint self-test OK: injected device_get in _decode_round "
+              f"was flagged ({hits[0].render()})")
+        return 0
+    print("qlint self-test FAILED: injected hot-path sync was NOT flagged",
+          file=sys.stderr)
+    return 1
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="JAX/Pallas-aware static analysis for the serving "
+                    "stack")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to lint (default: src)")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the full report (incl. waived/baselined) "
+                         "as JSON")
+    ap.add_argument("--baseline", metavar="PATH",
+                    default="qlint_baseline.json",
+                    help="fingerprint baseline; gate is zero NEW findings")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current unwaived findings to the baseline "
+                         "and exit 0")
+    ap.add_argument("--show-waived", action="store_true",
+                    help="also print waived and baselined findings")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("--self-test", action="store_true",
+                    help="inject a known violation and assert a nonzero "
+                         "gate")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule, desc in RULES.items():
+            print(f"{rule:24s} {desc}")
+        return 0
+    if args.self_test:
+        return _self_test(args.paths or ["src"])
+
+    findings = lint_paths(args.paths or ["src"])
+
+    baseline: Set[str] = set()
+    if args.baseline and os.path.exists(args.baseline) \
+            and not args.write_baseline:
+        with open(args.baseline, encoding="utf-8") as fh:
+            baseline = set(json.load(fh).get("fingerprints", []))
+    for f in findings:
+        if not f.waived and f.fingerprint in baseline:
+            f.baselined = True
+
+    active = [f for f in findings if not f.waived and not f.baselined]
+
+    if args.write_baseline:
+        payload = {"fingerprints": sorted({f.fingerprint for f in active})}
+        with open(args.baseline, "w", encoding="utf-8") as fh:
+            json.dump(payload, fh, indent=2)
+            fh.write("\n")
+        print(f"wrote {len(payload['fingerprints'])} fingerprint(s) to "
+              f"{args.baseline}")
+        return 0
+
+    shown = findings if args.show_waived else active
+    for f in shown:
+        print(f.render())
+    n_waived = sum(f.waived for f in findings)
+    n_base = sum(f.baselined for f in findings)
+    print(f"qlint: {len(active)} finding(s) "
+          f"({n_waived} waived, {n_base} baselined)")
+
+    if args.json:
+        with open(args.json, "w", encoding="utf-8") as fh:
+            json.dump({
+                "findings": [f.to_json() for f in findings],
+                "summary": {"active": len(active), "waived": n_waived,
+                            "baselined": n_base},
+            }, fh, indent=2)
+            fh.write("\n")
+
+    return 1 if active else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

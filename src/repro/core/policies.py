@@ -95,8 +95,8 @@ class ShepherdPolicy:
         n_inst = len(instances)
         per_model: Dict[str, List[InstanceInfo]] = {}
         for i, m in enumerate(models):
-            lo = (i * n_inst) // len(models)
-            hi = max(lo + 1, ((i + 1) * n_inst) // len(models))
+            lo = (i * n_inst) // len(models)  # qlint: disable=unguarded-div -- live is non-empty here (guarded above), so models has >= 1 entry
+            hi = max(lo + 1, ((i + 1) * n_inst) // len(models))  # qlint: disable=unguarded-div -- same: models derived from non-empty live
             per_model[m] = list(instances)[lo:hi]
         for g in sorted(live, key=lambda g: g.earliest_deadline()):
             subset = per_model[g.model]

@@ -28,6 +28,10 @@ class QLMConfig:
     # scheduler OFF the critical path ("overheads can be hidden", §8.3), so
     # back-to-back arrivals share one reordering.
     reschedule_cooldown: float = 2.0
+    # Run repro.analysis.invariants.check_queue_layer at every tick()
+    # (group placement/ownership, SLO-min, model homogeneity).  Also
+    # forced on by QLINT_INVARIANTS=1.  Debug aid.
+    debug_invariants: bool = False
 
 
 class QLMController:
@@ -143,11 +147,30 @@ class QLMController:
         any new information to act on.
         """
         if now - self._last_reschedule < self.cfg.reschedule_cooldown:
+            self._check_invariants()
             return False
+        rescheduled = False
         if self.scheduler.predict_violation(self.instances, now):
             self.reschedule(now)
-            return True
-        return False
+            rescheduled = True
+        self._check_invariants()
+        return rescheduled
+
+    _inv_sampler = None
+
+    def _check_invariants(self) -> None:
+        """Tick-boundary hook: queue-layer state (group placement, member
+        ownership) is only quiescent between scheduler actions."""
+        if not self.cfg.debug_invariants:
+            from repro.analysis.invariants import invariants_enabled
+            if not invariants_enabled():
+                return
+        if self._inv_sampler is None:
+            from repro.analysis.invariants import InvariantSampler
+            self._inv_sampler = InvariantSampler()
+        if self._inv_sampler.due():
+            from repro.analysis.invariants import check_queue_layer
+            check_queue_layer(self, where="controller.tick")
 
     def gc_groups(self) -> None:
         self.groups = [g for g in self.groups if not g.done()]

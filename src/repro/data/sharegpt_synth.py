@@ -47,7 +47,9 @@ def sample_lengths(rng: np.random.Generator, n: int,
         mi, mo = MEGA_PROMPT.sample(rng, int(m.sum()))
         # clip total to the 3k-4k band
         total = mi + mo
-        scale = np.clip(total, 3000, 4000) / total
+        # a zero-length sample would make scale inf/NaN and astype(int)
+        # then emits garbage lengths downstream
+        scale = np.clip(total, 3000, 4000) / np.maximum(total, 1)
         ins[m] = (mi * scale).astype(int)
         outs[m] = (mo * scale).astype(int)
     return ins, outs

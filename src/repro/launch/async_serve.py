@@ -205,6 +205,10 @@ async def run_async(args, registry, hw_by_model, arch_names) -> dict:
         "shed_dropped": fs.shed_dropped,
         "deferred_groups": fs.deferred_groups,
         "tokens_streamed": fs.tokens_streamed,
+        "acceptance_rate": fs.acceptance_rate,
+        "rejection_rate": fs.rejection_rate,
+        "expiry_rate": fs.expiry_rate,
+        "mean_tokens_per_accepted": fs.mean_tokens_per_accepted,
         "max_queue_depth": fs.max_queue_depth,
         "backpressure_engagements": fs.backpressure_engagements,
         "kv_blocks_leaked": sum(

@@ -73,9 +73,14 @@ def summarize(reqs, controller, engines, t_start: float, now: float) -> dict:
         "served": len(served),
         "rejected": len(extra_rej) + sum(1 for r in reqs if r.rejected),
         "dropped_unserved": len(dropped),
-        "slo_attainment": met / max(scored, 1),
+        # vacuous attainment is 1.0 (QLMController.slo_attainment): a
+        # zero-request or all-unscored run met every SLO it was given,
+        # and 0.0 would trip "attainment below threshold" alerting
+        "slo_attainment": met / scored if scored else 1.0,
+        # None, not float("nan"): NaN serializes as bare `NaN`, which is
+        # not valid JSON and breaks downstream parsers of --json output
         "mean_ttft_s": float(np.mean([r.ttft() for r in served]))
-        if served else float("nan"),
+        if served else None,
         "throughput_rps": len(served) / span,
         "evictions": sum(e.stats.evictions for e in engines),
         "swaps": sum(e.stats.model_swaps for e in engines),

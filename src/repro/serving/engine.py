@@ -164,6 +164,12 @@ class EngineConfig:
     # instead of rebuilding it in Python twice per step.  Off only for A/B
     # benchmarking against the seed behavior.
     incremental_block_table: bool = True
+    # Run repro.analysis.invariants.check_engine at every step()/steps()
+    # round boundary (BlockManager conservation, refcount accounting,
+    # slot-table sync, per-slot length contracts).  Also forced on by
+    # QLINT_INVARIANTS=1; QLINT_INVARIANTS_SAMPLE=N checks every Nth
+    # round.  Debug aid — O(pool + slots) python per checked round.
+    debug_invariants: bool = False
     # Refcounted prefix sharing + copy-on-write pages (paged backends only;
     # inert on the dense layouts, which have no physical pages to share).
     # Admission matches prompts against the BlockManager prefix index and
@@ -498,6 +504,7 @@ class ContinuousBatchingEngine:
             lambda full, one: full.at[:, b].set(one[:, 0]), self.cache, slot_cache)
 
     def _extract_cache(self, b: int):
+        # qlint: disable=host-sync-in-hot-path -- intended device->host copy: the eviction snapshot must leave the pool
         return jax.tree.map(lambda full: np.asarray(full[:, b]), self.cache)
 
     def _restore_cache(self, snapshot, b: int) -> None:
@@ -511,7 +518,8 @@ class ContinuousBatchingEngine:
         physical reclamation the dense per-slot layout couldn't do.  Under
         prefix sharing the caller passes only the PRIVATE tail (shared
         blocks stay alive in the pool, pinned by the snapshot)."""
-        bt = np.asarray(block_ids, np.int32)
+        bt = np.asarray(block_ids, np.int32)  # qlint: disable=host-sync-in-hot-path -- host list -> int32 index array, no device sync
+        # qlint: disable=host-sync-in-hot-path -- intended device->host copy: paged eviction snapshot leaves the pool
         return jax.tree.map(lambda full: np.asarray(full[:, bt]), self.cache)
 
     def _restore_pages(self, snapshot, block_ids: List[int],
@@ -524,7 +532,7 @@ class ContinuousBatchingEngine:
         n_snap = jax.tree.leaves(snapshot)[0].shape[1]
         assert len(block_ids) - offset >= n_snap, \
             (len(block_ids), offset, n_snap)
-        ids = jnp.asarray(np.asarray(block_ids[offset:offset + n_snap],
+        ids = jnp.asarray(np.asarray(block_ids[offset:offset + n_snap],  # qlint: disable=host-sync-in-hot-path -- host list -> device upload, no sync
                                      np.int32))
         self.cache = jax.tree.map(
             lambda full, snap: full.at[:, ids].set(jnp.asarray(snap)),
@@ -551,9 +559,9 @@ class ContinuousBatchingEngine:
         while width < len(ops):
             width *= 2
         pad = [ops[-1]] * (width - len(ops))
-        src = jnp.asarray(np.asarray([s for s, _ in ops] + [p[0] for p in pad],
+        src = jnp.asarray(np.asarray([s for s, _ in ops] + [p[0] for p in pad],  # qlint: disable=host-sync-in-hot-path -- host op list -> device upload, no sync
                                      np.int32))
-        dst = jnp.asarray(np.asarray([d for _, d in ops] + [p[1] for p in pad],
+        dst = jnp.asarray(np.asarray([d for _, d in ops] + [p[1] for p in pad],  # qlint: disable=host-sync-in-hot-path -- host op list -> device upload, no sync
                                      np.int32))
         self.cache = self._cow_fn(self.cache, src, dst)
         self.stats.cow_copies += len(ops)
@@ -791,7 +799,7 @@ class ContinuousBatchingEngine:
             # legacy single-shot path (SSM/hybrid/enc-dec state carry, and
             # modality extras that must ride the full-prompt prefill).
             # Compute first — a raising prefill must leave the engine clean.
-            tok, cache1 = self._prefill_one(np.asarray(req.prompt_tokens), ex)
+            tok, cache1 = self._prefill_one(np.asarray(req.prompt_tokens), ex)  # qlint: disable=host-sync-in-hot-path -- host prompt list -> array for the one-shot prefill path
             self.slots[slot] = req
             self._insert_cache(cache1, slot)
             self.lengths[slot] = req.prompt_len
@@ -1097,7 +1105,7 @@ class ContinuousBatchingEngine:
                 self.evict_slot(i)
                 req._in_flight = False
                 continue
-            chunk = np.asarray(req.prompt_tokens[pos:pos + n], np.int32)
+            chunk = np.asarray(req.prompt_tokens[pos:pos + n], np.int32)  # qlint: disable=host-sync-in-hot-path -- host prompt slice -> chunk array, no device sync
             chunks[i] = (chunk, n, final)
         if not chunks:
             return
@@ -1127,8 +1135,8 @@ class ContinuousBatchingEngine:
         # waits for the token array, leaving the cache update in flight —
         # prefill_time would otherwise time async dispatch, not compute
         # (and RWT calibration via profile() would under-report)
-        jax.block_until_ready(self.cache)
-        toks_out = np.asarray(toks_out)
+        jax.block_until_ready(self.cache)  # qlint: disable=host-sync-in-hot-path -- documented timed-region sync: one per chunk round, feeds prefill_time / RWT calibration
+        toks_out = np.asarray(toks_out)  # qlint: disable=host-sync-in-hot-path -- the round's single device->host result copy, inside the timed region
         self.stats.prefill_chunks += 1
         now = self.clock()
         for i, (_, n, final) in chunks.items():
@@ -1174,8 +1182,8 @@ class ContinuousBatchingEngine:
                 jnp.asarray(self.lengths))
         # sync the cache too (see _prefill_chunk_round): decode_time feeds
         # the RWT estimator's decode_per_token via profile()
-        jax.block_until_ready(self.cache)
-        next_tokens = np.asarray(next_tokens)
+        jax.block_until_ready(self.cache)  # qlint: disable=host-sync-in-hot-path -- documented timed-region sync: one per decode round, feeds decode_time / RWT
+        next_tokens = np.asarray(next_tokens)  # qlint: disable=host-sync-in-hot-path -- the round's single device->host result copy, inside the timed region
         self.stats.decode_iterations += 1
         self.stats.decode_time += time.monotonic() - t0
 
@@ -1282,8 +1290,8 @@ class ContinuousBatchingEngine:
             self.params, self.cache, jnp.asarray(tokens),
             jnp.asarray(self.lengths), jnp.asarray(remaining),
             jnp.asarray(active_mask), jnp.int32(n), bt)
-        jax.block_until_ready(self.cache)
-        out = np.asarray(out)
+        jax.block_until_ready(self.cache)  # qlint: disable=host-sync-in-hot-path -- documented timed-region sync: THE single per-burst host sync the device-resident loop budgets for
+        out = np.asarray(out)  # qlint: disable=host-sync-in-hot-path -- the burst's single device->host result copy, inside the timed region
         executed = int((out >= 0).any(axis=1).sum())
         self.stats.decode_iterations += executed
         self.stats.decode_time += time.monotonic() - t0
@@ -1348,6 +1356,7 @@ class ContinuousBatchingEngine:
         self._decode_round(done)
         self.completed.extend(done)
         admit_done, self._admit_completed = self._admit_completed, []
+        self._check_invariants()
         return admit_done + done
 
     def steps(self, k: Optional[int] = None) -> List[Request]:
@@ -1376,7 +1385,28 @@ class ContinuousBatchingEngine:
             self._decode_burst_round(done, k)
         self.completed.extend(done)
         admit_done, self._admit_completed = self._admit_completed, []
+        self._check_invariants()
         return admit_done + done
+
+    # ------------------------------------------------------------------
+    # runtime invariant checking (repro.analysis.invariants)
+    # ------------------------------------------------------------------
+    _inv_sampler = None
+
+    def _check_invariants(self) -> None:
+        """Round-boundary hook: the per-slot length/allocation contracts
+        and the BlockManager state machine are only quiescent here — the
+        checker must not run mid-round."""
+        if not self.cfg.debug_invariants:
+            from repro.analysis.invariants import invariants_enabled
+            if not invariants_enabled():
+                return
+        if self._inv_sampler is None:
+            from repro.analysis.invariants import InvariantSampler
+            self._inv_sampler = InvariantSampler()
+        if self._inv_sampler.due():
+            from repro.analysis.invariants import check_engine
+            check_engine(self, where=f"engine:{self.model_name}/round")
 
     # ------------------------------------------------------------------
     # profiling (feeds the RWT estimator + simulator)

@@ -133,6 +133,28 @@ class FrontendStats:
         return (self.rejected_full + self.rejected_backpressure
                 + self.rejected_admission + self.rejected_deadline)
 
+    # Every rate below guards its denominator: a zero-request run (or a
+    # run where everything was rejected) must report clean numbers, not
+    # raise ZeroDivisionError mid-shutdown or leak NaN into JSON stats.
+    @property
+    def acceptance_rate(self) -> float:
+        """accepted / submitted; vacuously 1.0 when nothing arrived."""
+        return self.accepted / self.submitted if self.submitted else 1.0
+
+    @property
+    def rejection_rate(self) -> float:
+        return self.rejected / self.submitted if self.submitted else 0.0
+
+    @property
+    def expiry_rate(self) -> float:
+        """Queue-expired fraction of what was actually accepted."""
+        return self.expired / self.accepted if self.accepted else 0.0
+
+    @property
+    def mean_tokens_per_accepted(self) -> float:
+        return (self.tokens_streamed / self.accepted
+                if self.accepted else 0.0)
+
 
 class RequestStream:
     """Per-request async token iterator — the client's handle.
@@ -148,16 +170,21 @@ class RequestStream:
         self._queue: asyncio.Queue = asyncio.Queue()
         self._delivered = 0
         self._finished = False
+        self._exc: Optional[BaseException] = None
 
     def __aiter__(self) -> "RequestStream":
         return self
 
     async def __anext__(self) -> int:
         if self._finished and self._queue.empty():
+            if self._exc is not None:
+                raise self._exc
             raise StopAsyncIteration
         tok = await self._queue.get()
         if tok is _DONE:
             self._finished = True
+            if self._exc is not None:
+                raise self._exc
             raise StopAsyncIteration
         return tok
 
@@ -190,6 +217,12 @@ class RequestStream:
     # server-side plumbing -------------------------------------------------
     def _push(self, tok: int) -> None:
         self._queue.put_nowait(tok)
+
+    def _abort(self, exc: BaseException) -> None:
+        """Serve-loop crash: fail this stream's consumers with the crash
+        instead of leaving them awaiting tokens that will never come."""
+        self._exc = exc
+        self._queue.put_nowait(_DONE)
 
     def _close(self) -> None:
         self._queue.put_nowait(_DONE)
@@ -284,6 +317,9 @@ class AsyncServer:
         exception, so callers can account it)."""
         now = self.clock()
         self.stats.submitted += 1
+        if self._task is not None and self._task.done():
+            # fail fast instead of queueing onto a dead loop
+            self._task.result()  # re-raises the serve loop's crash
         if self._stopping:
             return self._reject(req, now, "rejected_full")
         # raises like controller.submit would: a model NO instance serves
@@ -440,6 +476,18 @@ class AsyncServer:
         self._task = asyncio.ensure_future(self._run())
 
     async def _run(self) -> None:
+        # A serve-loop crash (engine error, invariant violation, bug) must
+        # FAIL every waiting client promptly: the task dying silently
+        # would leave each `await stream.drain()` / `server.drain()`
+        # hanging on tokens that will never arrive.
+        try:
+            await self._run_inner()
+        except BaseException as e:
+            for stream in list(self._live.values()):
+                stream._abort(e)
+            raise
+
+    async def _run_inner(self) -> None:
         cfg = self.cfg
         while True:
             now = self.clock()
@@ -451,6 +499,7 @@ class AsyncServer:
             busy = False
             for inst, agent in zip(self.controller.instances, self.agents):
                 inst.current_model = agent.engine.model_name
+                # qlint: disable=blocking-in-async -- the loop owns the engines: cancel/evict/shed paths run between awaits and must never overlap an engine round, so the round runs inline (single host thread; offloading would race them)
                 agent.run_iteration()
                 busy |= agent.engine.num_active() > 0
             self._pump_tokens()
@@ -467,6 +516,11 @@ class AsyncServer:
     async def drain(self) -> None:
         """Wait until every accepted request reached a terminal state."""
         while self._live:
+            if self._task is not None and self._task.done():
+                self._task.result()  # re-raises the serve loop's crash
+                raise RuntimeError(
+                    f"serve loop exited with {len(self._live)} live "
+                    f"request(s)")
             await asyncio.sleep(0.001)
 
     async def stop(self, cancel_outstanding: bool = False) -> None:

@@ -285,6 +285,16 @@ class BlockManager:
         assert self._ref[block] >= 1, block
         self._ref[block] -= 1
         if self._ref[block] == 0:
+            if self._cow_ops:
+                # A pending COW op whose *destination* dies here is moot (the
+                # queuing sequence is gone) and must not run: the block goes
+                # back on the free list and may be reallocated before the
+                # engine drains take_cow_ops(), so a late copy would clobber
+                # the new owner's page.  Ops whose *source* dies stay queued —
+                # the old page contents remain valid until the next dispatch,
+                # and the engine drains COW ops before dispatching.
+                self._cow_ops = [(s, d) for (s, d) in self._cow_ops
+                                 if d != block]
             if self.cache_freed \
                     and self._index.get(self._block_key.get(block)) == block:
                 self._cached[block] = None

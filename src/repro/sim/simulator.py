@@ -334,8 +334,8 @@ class ClusterSimulator:
     def _shepherd_subset(self, model: str, models: List[str]) -> List[SimInstance]:
         n_inst = len(self.instances)
         i = models.index(model)
-        lo = (i * n_inst) // len(models)
-        hi = max(lo + 1, ((i + 1) * n_inst) // len(models))
+        lo = (i * n_inst) // len(models)  # qlint: disable=unguarded-div -- models contains `model` (index above raised otherwise), so non-empty
+        hi = max(lo + 1, ((i + 1) * n_inst) // len(models))  # qlint: disable=unguarded-div -- same: models proven non-empty by .index
         return self.instances[lo:hi]
 
     # ------------------------------------------------------------------

@@ -13,6 +13,15 @@ def pytest_configure(config):
         "markers",
         "pallas: Pallas-kernel parity tests (interpret mode off-TPU) — "
         "select with `-m pallas`, skip with `-m 'not pallas'`")
+    # QLINT_INVARIANTS=1 turns the whole suite into an invariant suite:
+    # every BlockManager state transition and every engine round boundary
+    # (in ANY test, however the engine was constructed) runs
+    # repro.analysis.invariants checks.  QLINT_INVARIANTS_SAMPLE=N keeps
+    # it cheap on long property tests.
+    from repro.analysis.invariants import install_test_hooks, \
+        invariants_enabled
+    if invariants_enabled():
+        install_test_hooks()
 
 
 @pytest.fixture(scope="session")

@@ -208,8 +208,11 @@ def test_deadline_expired_request_never_dispatches(tiny):
             # force the deadline into the past while doomed is still queued
             # (no await between submit returning and this line, so the
             # server loop cannot have dispatched it): how long the hog
-            # holds the slot is machine-dependent, a wall-clock slo races
-            doomed.slo = 0.0
+            # holds the slot is machine-dependent, a wall-clock slo races.
+            # Backdate the arrival rather than zeroing the slo — the slo
+            # feeds the group's min-slo invariant at classification time
+            # and must stay immutable after admission (qlint invariants)
+            doomed.arrival_time -= 1e9
             await ds.drain()
             assert ds.status == "expired"
             await hs.drain()
@@ -365,3 +368,41 @@ def test_async_beats_sync_interactive_attainment_under_overload(tiny):
     # strictly beat the synchronous driver on interactive attainment
     assert async_stats["attainment_interactive"] \
         > sync_stats["attainment_interactive"], (async_stats, sync_stats)
+
+
+# ---------------------------------------------------------------------------
+# serve-loop crash propagation: a dead loop must fail clients, not hang them
+# ---------------------------------------------------------------------------
+
+def test_serve_loop_crash_fails_waiters_instead_of_hanging(tiny):
+    model, params = tiny
+    eng, controller, server = _stack(model, params, slots=2)
+
+    class _Boom(RuntimeError):
+        pass
+
+    async def go():
+        await server.start()
+        stream = await server.submit(_req(n_prompt=6, n_new=64, seed=11))
+
+        def explode():
+            raise _Boom("engine round blew up")
+
+        # crash the next engine round; before the _run crash handler
+        # existed this left stream.drain() and server.drain() awaiting
+        # tokens forever (observed: an InvariantViolation inside the loop
+        # hung the whole suite)
+        server.agents[0].run_iteration = explode
+        with pytest.raises(_Boom):
+            await asyncio.wait_for(stream.drain(), timeout=10)
+        with pytest.raises(_Boom):
+            await asyncio.wait_for(server.drain(), timeout=10)
+        # new submissions fail fast instead of queueing onto a dead loop
+        with pytest.raises(_Boom):
+            await server.submit(_req(seed=12))
+        # the task's own exception was consumed above; swallow it so
+        # asyncio.run doesn't log "exception was never retrieved"
+        with pytest.raises(_Boom):
+            await server._task
+
+    asyncio.run(go())

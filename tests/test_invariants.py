@@ -1,0 +1,259 @@
+"""Mutation tests for repro.analysis.invariants: seed each corruption the
+checker exists to catch (refcount skew, leaked block, double-free, slot
+table desync) and assert it is caught with an actionable message naming
+the block/seq involved.  Plus queue-layer checks and the engine
+round-boundary hook (EngineConfig.debug_invariants)."""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis.invariants import (InvariantSampler, InvariantViolation,
+                                       check_block_manager, check_engine,
+                                       check_queue_layer, invariants_enabled)
+from repro.core.global_scheduler import InstanceInfo
+from repro.core.qlm import QLMConfig, QLMController
+from repro.core.request import make_request
+from repro.core.request_group import RequestGroup
+from repro.core.virtual_queue import VirtualQueue
+from repro.serving.kv_cache import BlockManager
+
+
+def _bm(blocks=16, block_size=4, slot_rows=4):
+    bm = BlockManager(blocks, block_size, cache_freed=True)
+    bm.attach_slot_table(slot_rows, blocks)
+    return bm
+
+
+# ---------------------------------------------------------------------------
+# clean states pass
+# ---------------------------------------------------------------------------
+
+def test_clean_lifecycle_passes():
+    bm = _bm()
+    bm.allocate(1, 7)
+    bm.bind_slot(1, 0)
+    check_block_manager(bm)
+    bm.extend(1, 9)
+    bm.append_token(1)
+    check_block_manager(bm)
+    bm.register_prefix(1, list(range(8)), 8)
+    bm.fork(1, 2)
+    bm.bind_slot(2, 1)
+    check_block_manager(bm)
+    bm.free(2)
+    check_block_manager(bm)
+    kept, dropped = bm.evict_split(1)
+    check_block_manager(bm)
+    bm.free(1)
+    check_block_manager(bm)
+    bm.reset()
+    check_block_manager(bm)
+
+
+# ---------------------------------------------------------------------------
+# the four seeded corruptions
+# ---------------------------------------------------------------------------
+
+def test_corrupted_refcount_is_caught():
+    bm = _bm()
+    bm.allocate(1, 7)
+    b = bm.block_table(1)[0]
+    bm._ref[b] += 1                      # refcount skew, no real owner
+    with pytest.raises(InvariantViolation) as e:
+        check_block_manager(bm)
+    msg = str(e.value)
+    assert f"block {b}" in msg and "refcount" in msg
+
+
+def test_leaked_block_is_caught():
+    bm = _bm()
+    bm.allocate(1, 7)
+    leaked = bm._free.pop()              # vanishes from every partition
+    with pytest.raises(InvariantViolation) as e:
+        check_block_manager(bm)
+    msg = str(e.value)
+    assert "conservation" in msg and str(leaked) in msg
+
+
+def test_double_free_is_caught():
+    bm = _bm()
+    bm.allocate(1, 7)
+    b = bm.block_table(1)[0]
+    bm._free.append(b)                   # freed while seq 1 still holds it
+    with pytest.raises(InvariantViolation) as e:
+        check_block_manager(bm)
+    msg = str(e.value)
+    assert f"block {b}" in msg
+    assert "free" in msg and "seq" in msg  # names both sides of the bug
+
+
+def test_slot_table_desync_is_caught():
+    bm = _bm()
+    bm.allocate(1, 7)
+    bm.bind_slot(1, 2)
+    real = bm.block_table(1)[0]
+    bm._table[2, 0] = (real + 1) % bm.num_blocks   # stale incremental row
+    with pytest.raises(InvariantViolation) as e:
+        check_block_manager(bm)
+    msg = str(e.value)
+    assert "row 2" in msg and "seq 1" in msg and "desync" in msg
+
+
+def test_freed_seq_scrubs_pending_cow_ops():
+    # fork() queues a deferred COW op for the forked seq's partial tail
+    # block; freeing that seq before the engine drains take_cow_ops()
+    # must drop the op, or the released dst block can be reallocated and
+    # then clobbered by the late copy.
+    bm = _bm()
+    bm.allocate(1, 7)
+    bm.register_prefix(1, list(range(8)), 8)
+    bm.fork(1, 2)
+    assert any(True for _ in bm._cow_ops), "fork should queue a COW op"
+    bm.free(2)
+    free = set(bm._free)
+    assert all(d not in free for _, d in bm._cow_ops)
+    check_block_manager(bm)
+    # the block is reallocatable and the drained ops never touch it
+    bm.allocate(3, 7)
+    owned = set(bm.block_table(3))
+    assert all(d not in owned for _, d in bm.take_cow_ops())
+
+
+def test_pin_exceeding_refcount_is_caught():
+    bm = _bm()
+    bm.allocate(1, 7)
+    b = bm.block_table(1)[0]
+    bm._pins[b] = bm.ref_count(b) + 1
+    with pytest.raises(InvariantViolation) as e:
+        check_block_manager(bm)
+    assert f"block {b}" in str(e.value) and "pin" in str(e.value)
+
+
+# ---------------------------------------------------------------------------
+# queue layer
+# ---------------------------------------------------------------------------
+
+def _controller():
+    inst = InstanceInfo(0, {}, "m", VirtualQueue(0))
+    return QLMController([inst], QLMConfig(reschedule_on_arrival=False)), inst
+
+
+def _grouped_request(ctrl, inst, *, place=True):
+    r = make_request([1, 2, 3], "m", "interactive", arrival_time=0.0)
+    g = RequestGroup(model="m", slo=r.slo)
+    g.add(r)
+    ctrl.groups.append(g)
+    ctrl.global_queue.append(r)
+    if place:
+        inst.virtual_queue.groups.append(g)
+    return r, g
+
+
+def test_queue_layer_clean_passes():
+    ctrl, inst = _controller()
+    _grouped_request(ctrl, inst)
+    check_queue_layer(ctrl)
+
+
+def test_stranded_group_is_caught():
+    ctrl, inst = _controller()
+    r, g = _grouped_request(ctrl, inst, place=False)
+    with pytest.raises(InvariantViolation) as e:
+        check_queue_layer(ctrl)
+    assert f"group {g.group_id}" in str(e.value)
+    assert "stranded" in str(e.value)
+
+
+def test_double_placed_group_is_caught():
+    ctrl, inst = _controller()
+    r, g = _grouped_request(ctrl, inst)
+    inst2 = InstanceInfo(1, {}, "m", VirtualQueue(1))
+    inst2.virtual_queue.groups.append(g)
+    ctrl.instances.append(inst2)
+    with pytest.raises(InvariantViolation) as e:
+        check_queue_layer(ctrl)
+    assert f"group {g.group_id}" in str(e.value)
+    assert "2 virtual queues" in str(e.value)
+
+
+def test_unowned_request_is_caught():
+    ctrl, inst = _controller()
+    r = make_request([1, 2], "m", "interactive", arrival_time=0.0)
+    ctrl.global_queue.append(r)          # queued but in no group
+    with pytest.raises(InvariantViolation) as e:
+        check_queue_layer(ctrl)
+    assert f"request {r.req_id}" in str(e.value)
+    assert "0 group" in str(e.value)
+
+
+def test_group_slo_not_member_min_is_caught():
+    ctrl, inst = _controller()
+    r, g = _grouped_request(ctrl, inst)
+    g.slo = r.slo * 4                    # stale / corrupted group deadline
+    with pytest.raises(InvariantViolation) as e:
+        check_queue_layer(ctrl)
+    assert f"group {g.group_id}" in str(e.value)
+    assert "member minimum" in str(e.value)
+
+
+# ---------------------------------------------------------------------------
+# engine round-boundary hook (EngineConfig.debug_invariants)
+# ---------------------------------------------------------------------------
+
+def test_engine_debug_invariants_hook(tiny_engine):
+    eng = tiny_engine
+    req = make_request(list(range(12)), eng.model_name, "batch1",
+                       arrival_time=0.0, max_new_tokens=4)
+    eng.admit(req)
+    for _ in range(8):
+        eng.step()                       # checks run at every boundary
+        if req.finished():
+            break
+    assert req.finished()
+    # now corrupt the pool and run another round: the hook must trip
+    r2 = make_request(list(range(12)), eng.model_name, "batch1",
+                      arrival_time=0.0, max_new_tokens=4)
+    eng.admit(r2)
+    b = eng.block_mgr.block_table(r2.req_id)[0]
+    eng.block_mgr._ref[b] += 1
+    with pytest.raises(InvariantViolation):
+        eng.step()
+
+
+@pytest.fixture(scope="module")
+def tiny_engine():
+    from repro.configs import ARCHITECTURES
+    from repro.models import build_model
+    from repro.serving import ContinuousBatchingEngine, EngineConfig
+    cfg = ARCHITECTURES["granite-3-2b"].reduced(num_layers=1, d_model=64)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    ecfg = EngineConfig(max_slots=2, max_seq_len=64, block_size=8,
+                        attention_backend="paged-xla",
+                        debug_invariants=True)
+    return ContinuousBatchingEngine(model, params, ecfg,
+                                    model_name="granite-3-2b")
+
+
+# ---------------------------------------------------------------------------
+# enablement plumbing
+# ---------------------------------------------------------------------------
+
+def test_env_enablement(monkeypatch):
+    monkeypatch.delenv("QLINT_INVARIANTS", raising=False)
+    assert not invariants_enabled()
+    monkeypatch.setenv("QLINT_INVARIANTS", "0")
+    assert not invariants_enabled()
+    monkeypatch.setenv("QLINT_INVARIANTS", "1")
+    assert invariants_enabled()
+
+
+def test_sampler(monkeypatch):
+    monkeypatch.setenv("QLINT_INVARIANTS_SAMPLE", "3")
+    s = InvariantSampler()
+    assert [s.due() for _ in range(6)] == [False, False, True,
+                                           False, False, True]
+    monkeypatch.setenv("QLINT_INVARIANTS_SAMPLE", "not-a-number")
+    assert InvariantSampler().every == 1

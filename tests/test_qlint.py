@@ -1,0 +1,447 @@
+"""Unit tests for repro.analysis.lint: each rule firing on a minimal
+positive and staying quiet on the guarded negative, waiver parsing,
+baseline fingerprint gating, the CLI self-test, and a clean run over the
+real tree.  Plus regression tests for the fixes the pass flagged
+(summarize ratio reporting, FrontendStats rates, sharegpt scale guard).
+"""
+import json
+import textwrap
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.analysis.lint import Finding, lint_file, main
+
+
+def _lint(tmp_path, src, name="mod.py"):
+    p = tmp_path / name
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(src))
+    return lint_file(str(p))
+
+
+def _active(findings):
+    return [f for f in findings if not f.waived]
+
+
+def _rules(findings):
+    return [f.rule for f in _active(findings)]
+
+
+# ---------------------------------------------------------------------------
+# host-sync-in-hot-path
+# ---------------------------------------------------------------------------
+
+def test_host_sync_item_in_hot_path(tmp_path):
+    fs = _lint(tmp_path, """
+        class Engine:
+            def _decode_round(self):
+                n = self.lengths.item()
+                return n
+    """)
+    assert _rules(fs) == ["host-sync-in-hot-path"]
+    assert ".item()" in fs[0].message
+
+
+def test_host_sync_reaches_through_helper_calls(tmp_path):
+    # step -> self._helper -> module fn -> device_get: still hot
+    fs = _lint(tmp_path, """
+        import jax
+
+        def _pull(x):
+            return jax.device_get(x)
+
+        class Engine:
+            def _decode_round(self):
+                return self._helper()
+
+            def _helper(self):
+                return _pull(self.lengths)
+    """)
+    assert "host-sync-in-hot-path" in _rules(fs)
+    assert "device_get" in _active(fs)[0].message
+
+
+def test_host_sync_silent_outside_hot_path(tmp_path):
+    fs = _lint(tmp_path, """
+        class Engine:
+            def _decode_round(self):
+                return 0
+
+            def debug_dump(self):
+                return self.lengths.item()
+    """)
+    assert _rules(fs) == []
+
+
+def test_host_sync_flags_float_of_jit_output(tmp_path):
+    fs = _lint(tmp_path, """
+        class Engine:
+            def _decode_round(self):
+                out = self._decode_fn(self.cache)
+                return float(out)
+    """)
+    assert "host-sync-in-hot-path" in _rules(fs)
+
+
+# ---------------------------------------------------------------------------
+# use-after-donate
+# ---------------------------------------------------------------------------
+
+def test_use_after_donate_flagged(tmp_path):
+    fs = _lint(tmp_path, """
+        import jax
+
+        class Engine:
+            def __init__(self, f):
+                self._step_fn = jax.jit(f, donate_argnums=(0,))
+
+            def go(self, tok):
+                out = self._step_fn(self.cache, tok)
+                return self.cache
+    """)
+    assert _rules(fs) == ["use-after-donate"]
+    assert "self.cache" in fs[0].message and "donated" in fs[0].message
+
+
+def test_use_after_donate_rebind_is_clean(tmp_path):
+    fs = _lint(tmp_path, """
+        import jax
+
+        class Engine:
+            def __init__(self, f):
+                self._step_fn = jax.jit(f, donate_argnums=(0,))
+
+            def go(self, tok):
+                self.cache = self._step_fn(self.cache, tok)
+                return self.cache
+    """)
+    assert _rules(fs) == []
+
+
+# ---------------------------------------------------------------------------
+# retrace-hazard
+# ---------------------------------------------------------------------------
+
+def test_retrace_container_at_static_position(tmp_path):
+    fs = _lint(tmp_path, """
+        import jax
+
+        def f(x, shape):
+            return x
+
+        _fn = jax.jit(f, static_argnums=(1,))
+
+        def call(x):
+            return _fn(x, [1, 2])
+    """)
+    assert _rules(fs) == ["retrace-hazard"]
+    assert "unhashable" in fs[0].message
+
+
+def test_retrace_jit_inside_loop(tmp_path):
+    fs = _lint(tmp_path, """
+        import jax
+
+        def rounds(fns):
+            out = []
+            for f in fns:
+                out.append(jax.jit(f))
+            return out
+    """)
+    assert _rules(fs) == ["retrace-hazard"]
+    assert "inside a loop" in fs[0].message
+
+
+def test_retrace_hashable_static_is_clean(tmp_path):
+    fs = _lint(tmp_path, """
+        import jax
+
+        def f(x, n):
+            return x
+
+        _fn = jax.jit(f, static_argnums=(1,))
+
+        def call(x):
+            return _fn(x, 8)
+    """)
+    assert _rules(fs) == []
+
+
+# ---------------------------------------------------------------------------
+# blocking-in-async
+# ---------------------------------------------------------------------------
+
+def test_blocking_time_sleep_in_coroutine(tmp_path):
+    fs = _lint(tmp_path, """
+        import time
+
+        async def poll():
+            time.sleep(0.1)
+    """)
+    assert _rules(fs) == ["blocking-in-async"]
+    assert "asyncio.sleep" in fs[0].message
+
+
+def test_blocking_queue_get_in_coroutine(tmp_path):
+    fs = _lint(tmp_path, """
+        import queue
+
+        inbox = queue.Queue()
+
+        async def pump():
+            return inbox.get()
+    """)
+    assert _rules(fs) == ["blocking-in-async"]
+
+
+def test_engine_step_in_coroutine_flagged_unless_offloaded(tmp_path):
+    fs = _lint(tmp_path, """
+        import asyncio
+
+        async def serve(engine, loop):
+            engine.step()
+            await loop.run_in_executor(None, lambda: engine.steps(4))
+    """)
+    assert _rules(fs) == ["blocking-in-async"]
+    assert fs[0].line == 5          # the bare step(); the executor one not
+
+
+def test_sync_code_never_flagged(tmp_path):
+    fs = _lint(tmp_path, """
+        import time
+
+        def warmup():
+            time.sleep(0.1)
+    """)
+    assert _rules(fs) == []
+
+
+# ---------------------------------------------------------------------------
+# pallas-traced-branch
+# ---------------------------------------------------------------------------
+
+def test_pallas_branch_on_traced_value(tmp_path):
+    fs = _lint(tmp_path, """
+        def decode_kernel(q_ref, acc):
+            x = q_ref
+            if x > 0:
+                return acc
+            return acc
+    """, name="kernels/attn.py")
+    assert _rules(fs) == ["pallas-traced-branch"]
+    assert "decode_kernel" in fs[0].message
+
+
+def test_pallas_shape_branch_is_static(tmp_path):
+    fs = _lint(tmp_path, """
+        def decode_kernel(q_ref, acc):
+            if q_ref.shape[0] > 4:
+                return acc
+            return acc
+    """, name="kernels/attn.py")
+    assert _rules(fs) == []
+
+
+def test_pallas_rule_scoped_to_kernels_dir(tmp_path):
+    fs = _lint(tmp_path, """
+        def decode_kernel(q_ref, acc):
+            if q_ref > 0:
+                return acc
+            return acc
+    """, name="serving/attn.py")
+    assert _rules(fs) == []
+
+
+# ---------------------------------------------------------------------------
+# unguarded-div
+# ---------------------------------------------------------------------------
+
+def test_unguarded_counter_division(tmp_path):
+    fs = _lint(tmp_path, """
+        def attainment(self):
+            return self.met / self.scored
+    """)
+    assert _rules(fs) == ["unguarded-div"]
+    assert "self.scored" in fs[0].message
+
+
+def test_div_guarded_by_ternary_is_clean(tmp_path):
+    fs = _lint(tmp_path, """
+        def attainment(self):
+            return self.met / self.scored if self.scored else 1.0
+    """)
+    assert _rules(fs) == []
+
+
+def test_div_guarded_by_early_return_is_clean(tmp_path):
+    fs = _lint(tmp_path, """
+        def attainment(self):
+            if not self.scored:
+                return 1.0
+            return self.met / self.scored
+    """)
+    assert _rules(fs) == []
+
+
+def test_div_len_denominator(tmp_path):
+    fs = _lint(tmp_path, """
+        def mean_ttft(served):
+            return sum(served) / len(served)
+    """)
+    assert _rules(fs) == ["unguarded-div"]
+
+
+def test_div_max_rebind_is_clean(tmp_path):
+    fs = _lint(tmp_path, """
+        def rate(done, total):
+            total = max(total, 1)
+            return done / total
+    """)
+    assert _rules(fs) == []
+
+
+# ---------------------------------------------------------------------------
+# waivers
+# ---------------------------------------------------------------------------
+
+def test_trailing_waiver_with_reason(tmp_path):
+    fs = _lint(tmp_path, """
+        class Engine:
+            def _decode_round(self):
+                return self.lengths.item()  # qlint: disable=host-sync-in-hot-path -- single documented sync per round
+    """)
+    assert _rules(fs) == []
+    assert len(fs) == 1 and fs[0].waived
+    assert fs[0].waive_reason == "single documented sync per round"
+
+
+def test_standalone_waiver_covers_next_line(tmp_path):
+    fs = _lint(tmp_path, """
+        class Engine:
+            def _decode_round(self):
+                # qlint: disable=host-sync-in-hot-path -- warmup only
+                return self.lengths.item()
+    """)
+    assert _rules(fs) == []
+    assert any(f.waived for f in fs)
+
+
+def test_waiver_missing_reason_is_itself_a_finding(tmp_path):
+    fs = _lint(tmp_path, """
+        class Engine:
+            def _decode_round(self):
+                return self.lengths.item()  # qlint: disable=host-sync-in-hot-path
+    """)
+    assert "waiver-missing-reason" in _rules(fs)
+
+
+def test_waiver_for_other_rule_does_not_mask(tmp_path):
+    fs = _lint(tmp_path, """
+        class Engine:
+            def _decode_round(self):
+                return self.lengths.item()  # qlint: disable=unguarded-div -- wrong rule
+    """)
+    assert "host-sync-in-hot-path" in _rules(fs)
+
+
+# ---------------------------------------------------------------------------
+# fingerprints + baseline gating via the CLI
+# ---------------------------------------------------------------------------
+
+_VIOLATION = """
+def attainment(self):
+    return self.met / self.scored
+"""
+
+
+def test_fingerprint_is_line_independent():
+    a = Finding("unguarded-div", "m.py", 3, 4, "division by `x`")
+    b = Finding("unguarded-div", "m.py", 90, 0, "division by `x`")
+    c = Finding("unguarded-div", "m.py", 3, 4, "division by `y`")
+    assert a.fingerprint == b.fingerprint != c.fingerprint
+
+
+def test_baseline_gate_is_zero_new_findings(tmp_path, capsys):
+    mod = tmp_path / "m.py"
+    mod.write_text(_VIOLATION)
+    base = tmp_path / "baseline.json"
+
+    assert main([str(mod), "--baseline", str(base)]) == 1
+    assert main([str(mod), "--baseline", str(base),
+                 "--write-baseline"]) == 0
+    assert len(json.loads(base.read_text())["fingerprints"]) == 1
+    # baselined finding no longer gates...
+    assert main([str(mod), "--baseline", str(base)]) == 0
+    # ...but a NEW violation (even shifted lines) does
+    mod.write_text("x = 1\n\n" + _VIOLATION +
+                   "\ndef r(self):\n    return self.ok / self.count\n")
+    capsys.readouterr()                      # drop earlier runs' output
+    assert main([str(mod), "--baseline", str(base)]) == 1
+    out = capsys.readouterr().out
+    assert "self.count" in out and "self.scored" not in out
+
+
+def test_json_report_includes_waived(tmp_path):
+    mod = tmp_path / "m.py"
+    mod.write_text("def f(self):\n"
+                   "    return self.a / self.scored  "
+                   "# qlint: disable=unguarded-div -- test fixture\n")
+    report = tmp_path / "report.json"
+    assert main([str(mod), "--baseline", str(tmp_path / "b.json"),
+                 "--json", str(report)]) == 0
+    data = json.loads(report.read_text())
+    assert data["summary"] == {"active": 0, "waived": 1, "baselined": 0}
+    assert data["findings"][0]["fingerprint"]
+
+
+# ---------------------------------------------------------------------------
+# the real tree + self-test
+# ---------------------------------------------------------------------------
+
+def test_repo_tree_is_clean():
+    assert main(["src", "--baseline", "qlint_baseline.json"]) == 0
+
+
+def test_self_test_flags_injected_violation(capsys):
+    assert main(["src", "--self-test"]) == 0
+    assert "self-test OK" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# regression tests for the fixes this pass flagged
+# ---------------------------------------------------------------------------
+
+def test_summarize_zero_request_run():
+    from repro.launch.serve import summarize
+    ctrl = SimpleNamespace(rejected=[])
+    out = summarize([], ctrl, [], t_start=0.0, now=1.0)
+    assert out["slo_attainment"] == 1.0      # vacuous, not ZeroDivisionError
+    assert out["mean_ttft_s"] is None        # not NaN
+    json.dumps(out)                          # stays valid JSON
+
+
+def test_frontend_stats_rates_guard_zero_denominators():
+    from repro.serving.frontend import FrontendStats
+    s = FrontendStats()
+    assert s.acceptance_rate == 1.0
+    assert s.rejection_rate == 0.0
+    assert s.expiry_rate == 0.0
+    assert s.mean_tokens_per_accepted == 0.0
+    s.submitted, s.accepted, s.rejected_full = 4, 3, 1
+    s.expired, s.tokens_streamed = 1, 30
+    assert s.acceptance_rate == pytest.approx(0.75)
+    assert s.rejection_rate == pytest.approx(0.25)
+    assert s.expiry_rate == pytest.approx(1 / 3)
+    assert s.mean_tokens_per_accepted == pytest.approx(10.0)
+
+
+def test_sharegpt_mega_scale_survives_zero_total(monkeypatch):
+    from repro.data import sharegpt_synth as sg
+    monkeypatch.setattr(                     # dataclass is frozen: patch class
+        sg.TokenDistribution, "sample",
+        lambda self, rng, n: (np.zeros(n), np.zeros(n)))
+    ins, outs = sg.sample_lengths(np.random.default_rng(0), 32,
+                                  mega_fraction=1.0)
+    assert np.isfinite(ins).all() and np.isfinite(outs).all()
