@@ -55,7 +55,21 @@ per-slot counters are legitimately in motion):
     exactly one group;
   * **group homogeneity** — members match the group's model, carry its
     ``group_id``, and the group SLO is the member minimum (the
-    conservative deadline the RWT walk schedules against).
+    conservative deadline the RWT walk schedules against);
+  * **dead instances hold nothing** — a DEAD instance's virtual queue is
+    empty (``mark_dead`` empties it; the scheduler must never re-place
+    onto it).
+
+``check_terminal_states`` (QLMController, at ticks — the fault-tolerance
+conservation law):
+
+  * every tracked request is in exactly one of {queued-in-placed-group,
+    engine-resident, finished, rejected, failed-quarantined};
+  * a waiting (non-terminal, not in-flight) request belongs to a group
+    reachable from an alive virtual queue — engine death redelivers or
+    quarantines, it never silently strands work;
+  * with engine handles attached, an in-flight request is resident in an
+    ALIVE engine (slot or pushback) — no ``_in_flight=True`` limbo.
 
 Enabling
 --------
@@ -315,12 +329,37 @@ def check_engine(engine: Any, *, where: str = "engine") -> None:
 # ---------------------------------------------------------------------------
 # Queue layer (controller ticks)
 # ---------------------------------------------------------------------------
+def _alive_flags(controller: Any) -> List[bool]:
+    """Per-instance liveness; controllers without supervision (pre-fault-
+    tolerance callers, stub controllers in tests) read as all-alive."""
+    n = len(controller.instances)
+    health = getattr(controller, "health", None)
+    if health is None:
+        return [True] * n
+    flags = [h.state != "dead" for h in health]
+    # callers may grow controller.instances after construction (tests,
+    # scale-up): unsupervised extras read as alive
+    flags += [True] * (n - len(flags))
+    return flags[:n]
+
+
 def check_queue_layer(controller: Any, *, where: str = "queue-layer") -> None:
     # placement: group -> virtual queues that can reach it
+    alive = _alive_flags(controller)
     placements: Dict[int, List[int]] = {}
     vq_groups: List[Any] = []
-    for inst in controller.instances:
+    for idx, inst in enumerate(controller.instances):
         vq = inst.virtual_queue
+        if not alive[idx]:
+            undone = [g for g in vq.groups if not g.done()]
+            if undone:
+                _fail(where,
+                      f"DEAD instance {vq.instance_id} still holds "
+                      f"{len(undone)} group(s) "
+                      f"{[g.group_id for g in undone]}: mark_dead must "
+                      f"empty the virtual queue and nothing may re-place "
+                      f"onto a dead instance")
+            continue
         for g in vq.groups:
             placements.setdefault(id(g), []).append(vq.instance_id)
             vq_groups.append(g)
@@ -380,6 +419,94 @@ def check_queue_layer(controller: Any, *, where: str = "queue-layer") -> None:
                       f"group {g.group_id} SLO {g.slo} != member minimum "
                       f"{mn} (the RWT walk would schedule against the "
                       f"wrong deadline)")
+
+
+# ---------------------------------------------------------------------------
+# Terminal-state conservation (fault tolerance: §4 "the global queue is
+# the durable request store")
+# ---------------------------------------------------------------------------
+def check_terminal_states(controller: Any, engines: Optional[List[Any]] = None,
+                          *, where: str = "terminal-states") -> None:
+    """Every submitted request is in exactly one of
+    {queued-in-placed-group, engine-resident, finished, rejected,
+    failed-quarantined} at tick boundaries.
+
+    ``engines`` (index-aligned with ``controller.instances``) enables the
+    residency cross-check: an ``_in_flight`` request must actually sit in
+    an ALIVE engine's slots or pushback — the state engine failure paths
+    are most likely to strand.  Terminal requests are classified before
+    ``_in_flight`` is consulted (the engine's finish path leaves the flag
+    set on completed requests by design)."""
+    alive = _alive_flags(controller)
+
+    # group membership over not-done groups with an alive placement
+    placed: Dict[int, bool] = {}
+    for idx, inst in enumerate(controller.instances):
+        if not alive[idx]:
+            continue
+        for g in inst.virtual_queue.groups:
+            placed[id(g)] = True
+    member_placed: Dict[int, List[int]] = {}
+    for g in controller.groups:
+        if g.done():
+            continue
+        for r in g.requests:
+            if placed.get(id(g), False):
+                member_placed.setdefault(id(r), []).append(g.group_id)
+
+    # residency over alive engines (slots + pushback limbo)
+    resident: Dict[int, str] = {}
+    if engines is not None:
+        for idx, eng in enumerate(engines):
+            if eng is None or not alive[idx]:
+                continue
+            for slot, r in enumerate(eng.slots):
+                if r is not None:
+                    resident[id(r)] = f"engine {idx} slot {slot}"
+            pushed = getattr(eng, "_pushback", None)
+            if pushed is not None:
+                resident[id(pushed)] = f"engine {idx} pushback"
+
+    failed_ids = {id(r) for r in getattr(controller, "failed", ())}
+    for r in controller.global_queue + controller.finished \
+            + controller.rejected:
+        rid = f"request {r.req_id} (model {r.model}, slo {r.slo})"
+        terminal = [s for s, on in (("rejected", r.rejected),
+                                    ("failed", getattr(r, "failed", False)),
+                                    ("finished", r.finished())) if on]
+        if terminal:
+            # exactly-one is state-machine exactness, not double counting:
+            # attainment already scores failed-first.  rejected+finished
+            # is legal (rejections are stamped finished); failed+rejected
+            # would double-classify.
+            if r.rejected and getattr(r, "failed", False):
+                _fail(where, f"{rid} is both rejected (never admitted) and "
+                             f"failed-quarantined (admitted, then poisoned)")
+            if not r.finished():
+                _fail(where, f"{rid} is {terminal[0]} but has no "
+                             f"completion_time: group cursors will never "
+                             f"skip it (liveness leak)")
+            if getattr(r, "failed", False) and id(r) not in failed_ids:
+                _fail(where, f"{rid} is failed-quarantined but missing "
+                             f"from controller.failed (stats desync)")
+            continue
+        if getattr(r, "_in_flight", False):
+            if engines is not None and id(r) not in resident:
+                _fail(where,
+                      f"{rid} is marked _in_flight but resident in no "
+                      f"alive engine (slot or pushback): a failure path "
+                      f"returned it to the queue without clearing the "
+                      f"flag, so no agent will ever pull it again")
+            continue
+        # waiting: must be reachable from exactly one alive virtual queue
+        owners = member_placed.get(id(r), [])
+        if len(owners) != 1:
+            state = ("stranded: member of no group placed on an alive "
+                     "instance" if not owners else
+                     f"placed {len(owners)} times: groups {owners}")
+            _fail(where, f"{rid} is waiting (non-terminal, not in flight) "
+                         f"but {state} — engine death must redeliver or "
+                         f"quarantine every in-flight request")
 
 
 # ---------------------------------------------------------------------------

@@ -99,6 +99,12 @@ class GlobalScheduler:
             inst.virtual_queue.set_order([])
         for g in sorted(groups, key=lambda g: g.earliest_deadline()):
             candidates = [i for i in instances if g.model in i.hw_by_model]
+            if not candidates:
+                # no surviving instance serves this model (capacity loss):
+                # leave the group unplaced — the controller quarantines
+                # unservable requests before re-solving, so reaching here
+                # means the stranded-group invariant will name it
+                continue
             inst = min(candidates,
                        key=lambda i: (0 if (i.virtual_queue.models_in_order() or
                                             [i.current_model])[-1] == g.model else 1,

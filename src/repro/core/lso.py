@@ -38,10 +38,17 @@ class QLMAgent:
         pushed = self.engine.take_pushback()
         if pushed is not None:
             pushed._in_flight = False
-        req = self.vq.next_request(self.engine.model_name)
+            pushed._served_by = None
+        # clock-gated: redelivered requests in exponential backoff
+        # (not_before) are skipped until their window opens
+        req = self.vq.next_request(self.engine.model_name,
+                                   now=self.engine.clock())
         if req is None:
             return None
         req._in_flight = True
+        # tag the serving instance: on engine death the supervisor sweeps
+        # the global queue for _served_by == this VQ's instance
+        req._served_by = self.vq.instance_id
         return req
 
     # -- eviction + swap LSOs -------------------------------------------------
@@ -56,6 +63,10 @@ class QLMAgent:
             evicted = self.engine.swap_model(model, params, head.model)
             for r in evicted:
                 r._in_flight = False
+                r._served_by = None
+            # the swap rebuilt engine state: forget the cached head so the
+            # head-change eviction LSO re-evaluates on the next sync
+            self._last_head = None
         # request eviction: fires when the global scheduler moved a NEW
         # group to the head (§5) and its requests are blocked by other
         # groups' running requests (HOL un-blocking)
@@ -71,8 +82,21 @@ class QLMAgent:
                     if running is not None and running.group_id != head.group_id:
                         r = self.engine.evict_slot(slot)
                         r._in_flight = False
+                        r._served_by = None
                         if self.engine.can_admit(head_pending[0]):
                             break
+
+    def reset(self) -> None:
+        """Failure-path reset (engine crash / recovery / external engine
+        reset): forget the cached VQ head — the first post-recovery
+        ``sync()`` must re-evaluate the head-change eviction LSO instead
+        of assuming continuity with pre-failure state — and drain any
+        pushback limbo so no request strands with ``_in_flight=True``."""
+        self._last_head = None
+        pushed = self.engine.take_pushback()
+        if pushed is not None:
+            pushed._in_flight = False
+            pushed._served_by = None
 
     def run_iteration(self):
         """sync + one engine iteration (the serve loop quantum).  Engines

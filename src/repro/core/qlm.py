@@ -32,6 +32,45 @@ class QLMConfig:
     # (group placement/ownership, SLO-min, model homogeneity).  Also
     # forced on by QLINT_INVARIANTS=1.  Debug aid.
     debug_invariants: bool = False
+    # -- fault tolerance (§4: the global queue survives engine death) -----
+    # Redelivery attempts per request after its serving engine dies; the
+    # (budget+1)-th death quarantines the request as FAILED — the poison
+    # policy: a request that kills retry_budget+1 engines stops being
+    # retried instead of crash-looping the cluster.
+    retry_budget: int = 2
+    # Exponential backoff for redelivered requests:
+    # min(cap, base * 2**(n-1)) seconds after the nth redelivery.
+    backoff_base_s: float = 0.05
+    backoff_cap_s: float = 2.0
+    # Missed-heartbeat supervision: None disables (sparse-tick callers,
+    # e.g. unit tests driving tick() manually, must not read as silence).
+    # An instance is DEGRADED after missing `degraded_after_missed`
+    # windows and DEAD after `dead_after_missed`.
+    heartbeat_timeout_s: Optional[float] = None
+    degraded_after_missed: int = 1
+    dead_after_missed: int = 3
+    # Consecutive transient (non-fatal) engine errors before the
+    # supervisor gives up on the instance; any successful heartbeat
+    # resets the strike counter.
+    transient_strikes: int = 3
+
+
+# Instance health states (supervision state machine — see
+# docs/fault_tolerance.md).  DEAD is terminal: a crashed engine's pool
+# and resident state are gone; recovery means standing up a NEW instance.
+HEALTHY = "healthy"
+DEGRADED = "degraded"
+DEAD = "dead"
+
+
+@dataclasses.dataclass
+class InstanceHealth:
+    state: str = HEALTHY
+    last_heartbeat: Optional[float] = None
+    strikes: int = 0              # consecutive transient errors
+    missed: int = 0               # consecutive missed heartbeat windows
+    died_at: Optional[float] = None
+    cause: Optional[str] = None
 
 
 class QLMController:
@@ -51,23 +90,234 @@ class QLMController:
         # attainment over admitted requests only would reward rejecting
         # everything hard to serve
         self.rejected: List[Request] = []
+        # requests quarantined after exhausting their redelivery budget or
+        # losing every instance that could serve their model (poison
+        # policy).  Observability list only: the requests themselves stay
+        # in global_queue/finished (stamped terminal), so attainment
+        # iterates them exactly once via all_requests().
+        self.failed: List[Request] = []
+        # supervision: per-instance health, index-aligned with
+        # self.instances (the simulator rebuilds InstanceInfo views but
+        # keeps the order)
+        self.health: List[InstanceHealth] = [InstanceHealth()
+                                             for _ in self.instances]
+        self.redeliveries = 0        # total redelivery events (stats)
+        # optional engine handles, index-aligned with instances: lets
+        # mark_dead() reclaim a dead engine's resident requests and lets
+        # the terminal-state invariant cross-check engine residency
+        self._engines: Optional[List] = None
         self._last_reschedule = -math.inf
+
+    # -- supervision -------------------------------------------------------
+    def attach_engines(self, engines: Sequence) -> None:
+        """Register the engine behind each instance (order-aligned with
+        ``instances``).  Optional: without it, mark_dead() can only sweep
+        queue-visible state (``_served_by`` / snapshots)."""
+        assert len(engines) == len(self.instances), \
+            (len(engines), len(self.instances))
+        self._engines = list(engines)
+
+    def is_alive(self, idx: int) -> bool:
+        return self.health[idx].state != DEAD
+
+    def alive_instances(self) -> List[InstanceInfo]:
+        return [inst for i, inst in enumerate(self.instances)
+                if self.is_alive(i)]
+
+    def alive_fraction(self) -> float:
+        if not self.instances:
+            return 0.0
+        return len(self.alive_instances()) / len(self.instances)
+
+    def can_serve(self, model: str) -> bool:
+        """Does any ALIVE instance serve ``model``?"""
+        return any(model in i.hw_by_model for i in self.alive_instances())
+
+    def heartbeat(self, idx: int, now: float) -> None:
+        """A successful agent iteration: reset the strike/missed counters
+        and recover a DEGRADED instance (DEAD stays dead — the pool is
+        gone; recovery means attaching a new instance)."""
+        h = self.health[idx]
+        if h.state == DEAD:
+            return
+        h.last_heartbeat = now
+        h.strikes = 0
+        h.missed = 0
+        if h.state == DEGRADED:
+            h.state = HEALTHY
+
+    def check_heartbeats(self, now: float) -> None:
+        """Tick-side liveness: an instance whose agent has not heartbeated
+        for ``heartbeat_timeout_s`` misses windows; enough misses degrade
+        then kill it (a wedged engine strands its whole virtual queue)."""
+        timeout = self.cfg.heartbeat_timeout_s
+        if timeout is None:
+            return
+        for idx, h in enumerate(self.health):
+            if h.state == DEAD:
+                continue
+            if h.last_heartbeat is None:
+                h.last_heartbeat = now   # start the window at first sight
+                continue
+            h.missed = int((now - h.last_heartbeat) // timeout)
+            if h.missed >= self.cfg.dead_after_missed:
+                self.mark_dead(idx, now, cause=(
+                    f"missed {h.missed} heartbeat window(s) of {timeout}s"))
+            elif h.missed >= self.cfg.degraded_after_missed \
+                    and h.state == HEALTHY:
+                h.state = DEGRADED
+
+    def report_engine_failure(self, idx: int, exc: BaseException, now: float,
+                              engine=None) -> str:
+        """Agent-exception supervision: fatal failures (``EngineCrashed`` /
+        ``EngineDead`` — ``exc.fatal``) kill the instance immediately;
+        transient errors strike it (DEGRADED) until
+        ``cfg.transient_strikes`` consecutive strikes give up on it.
+        Returns the resulting health state."""
+        h = self.health[idx]
+        if h.state == DEAD:
+            return DEAD
+        if engine is not None and self._engines is not None:
+            self._engines[idx] = engine
+        if getattr(exc, "fatal", False):
+            self.mark_dead(idx, now, cause=repr(exc), engine=engine)
+            return DEAD
+        h.strikes += 1
+        if h.strikes >= self.cfg.transient_strikes:
+            self.mark_dead(idx, now, cause=(
+                f"{h.strikes} consecutive transient errors "
+                f"(last: {exc!r})"), engine=engine)
+            return DEAD
+        h.state = DEGRADED
+        return DEGRADED
+
+    def backoff(self, n: int) -> float:
+        """Redelivery backoff after the nth delivery failure (n >= 1):
+        exponential, capped."""
+        return min(self.cfg.backoff_cap_s,
+                   self.cfg.backoff_base_s * (2.0 ** (n - 1)))
+
+    def mark_dead(self, idx: int, now: float, cause: str = "killed",
+                  engine=None) -> None:
+        """Quarantine instance ``idx`` and recover its work (§4 fault
+        tolerance: requests live in the global queue, virtual queues hold
+        pointers — so losing an engine loses no request):
+
+          1. the dead VQ is emptied (groups are pointers; the requests
+             are still in the global queue);
+          2. the engine's resident requests (slots + pushback limbo) are
+             abandoned — KV accounting freed host-side, nothing stamped
+             terminal — and redelivered with backoff;
+          3. snapshots pinned in the dead pool are discarded (pins
+             released so the dead BlockManager's accounting stays
+             conserved) and their requests restart cleanly;
+          4. requests whose model no longer has an alive instance are
+             quarantined as recorded misses;
+          5. surviving groups are re-placed on alive instances and the
+             scheduler re-solves without the dead one.
+        """
+        h = self.health[idx]
+        if h.state == DEAD:
+            return
+        h.state = DEAD
+        h.died_at = now
+        h.cause = cause
+        if engine is None and self._engines is not None:
+            engine = self._engines[idx]
+        dead_inst = self.instances[idx]
+        dead_inst.virtual_queue.groups.clear()
+        dead_pool = getattr(engine, "block_mgr", None)
+        # 2. reclaim engine-resident requests (crash salvage)
+        if engine is not None and hasattr(engine, "abandon"):
+            for r in engine.abandon():
+                if not r.finished():
+                    self._redeliver(r, now)
+        # 3./4. sweep the global queue: dead-pool snapshots, stragglers
+        # still tagged as served by the dead instance, unservable models
+        for r in list(self.global_queue):
+            if r.finished():
+                continue
+            snap = r.snapshot
+            if snap is not None and isinstance(snap, dict) \
+                    and snap.get("pin_owner") is not None \
+                    and snap.get("pin_owner") is dead_pool:
+                # pinned in the dead pool: the pinned pages died with the
+                # engine — release the pins (conserves the dead pool's
+                # accounting) and restart from the prompt
+                if snap.get("pinned"):
+                    snap["pin_owner"].release_pins(snap["pinned"],
+                                                   snap.get("pin_epoch"))
+                r.restart()
+            if getattr(r, "_served_by", None) == idx \
+                    and getattr(r, "_in_flight", False):
+                self._redeliver(r, now)
+            if not r.finished() and not self.can_serve(r.model):
+                self._quarantine(r, now, f"model {r.model} unservable "
+                                         f"after instance {idx} died")
+        # 5. re-place orphaned groups, then re-solve over the survivors
+        self.gc_groups()
+        for g in self.groups:
+            if not g.done() and not self._placed(g):
+                self._place_new_group(g, now)
+        if self.alive_instances():
+            self.reschedule(now)
+        self._check_invariants()
+
+    def _redeliver(self, r: Request, now: float) -> None:
+        """Return an in-flight request to the (still-placed) global queue
+        with retry budget + exponential backoff."""
+        r._in_flight = False
+        r._served_by = None
+        r.redeliveries += 1
+        if r.redeliveries > self.cfg.retry_budget:
+            self._quarantine(r, now, f"retry budget exhausted after "
+                                     f"{r.redeliveries} deliveries")
+            return
+        self.redeliveries += 1
+        r.not_before = now + self.backoff(r.redeliveries)
+        if r.snapshot is None and (r.generated > 0 or r._prefill_done > 0):
+            # generation state died with the engine and no snapshot
+            # survived: restart cleanly (first_token_time kept — never
+            # double-counted in attainment; see Request.restart)
+            r.restart()
+
+    def _quarantine(self, r: Request, now: float, cause: str) -> None:
+        """Poison/unservable terminal state: a recorded SLO miss.  The
+        request is stamped finished so group cursors skip it and gc moves
+        it to ``finished``; ``failed`` makes attainment score it a miss
+        even if a pre-crash first token landed in time."""
+        r.failed = True
+        r.fail_cause = cause
+        r._in_flight = False
+        r._served_by = None
+        snap = r.snapshot
+        if snap is not None and isinstance(snap, dict) and snap.get("pinned") \
+                and snap.get("pin_owner") is not None:
+            snap["pin_owner"].release_pins(snap["pinned"],
+                                           snap.get("pin_epoch"))
+        r.snapshot = None
+        if r.completion_time is None:
+            r.completion_time = now
+        self.failed.append(r)
 
     @property
     def max_group(self) -> int:
         return max(1, int(self.cfg.avg_batch_size * self.cfg.delta))
 
     # ------------------------------------------------------------------
-    def submit(self, req: Request, now: float) -> None:
+    def submit(self, req: Request, now: float) -> bool:
         """API-gateway entry: enqueue, classify into a group, reschedule if
         the RWT estimator predicts a violation.
 
-        Raises ``ValueError`` when NO instance can serve ``req.model`` —
-        once, here, instead of letting ``predict_violation`` report an
-        unfixable violation every cooldown tick (solver thrash).
-        """
-        if not any(req.model in i.hw_by_model for i in self.instances):
-            raise ValueError(f"no instance can serve model {req.model}")
+        When NO alive instance can serve ``req.model`` the request is
+        recorded as a 400-style rejection (an attainment miss) and
+        ``False`` is returned — once, here, instead of raising out of the
+        serve path (one bad request must not kill the loop) or letting
+        ``predict_violation`` report an unfixable violation every
+        cooldown tick (solver thrash)."""
+        if not self.can_serve(req.model):
+            self.record_rejection(req, now)
+            return False
         self.global_queue.append(req)
         g = classify_into_groups(req, self.groups, max_group=self.max_group)
         if g is None:
@@ -84,8 +334,9 @@ class QLMController:
             self._place_new_group(g, now)
         if self.cfg.reschedule_on_arrival and \
                 now - self._last_reschedule >= self.cfg.reschedule_cooldown and \
-                self.scheduler.predict_violation(self.instances, now):
+                self.scheduler.predict_violation(self.alive_instances(), now):
             self.reschedule(now)
+        return True
 
     def submit_batch(self, requests: Sequence[Request], now: float) -> None:
         """Bulk arrival: form groups with Algorithm 1 k-means, then solve."""
@@ -116,9 +367,13 @@ class QLMController:
         heterogeneity-aware (Design Principle #3: an A10 absorbs
         proportionally less work than an A100), unlike a raw request count.
         """
-        candidates = [i for i in self.instances if g.model in i.hw_by_model]
+        candidates = [i for i in self.alive_instances()
+                      if g.model in i.hw_by_model]
         if not candidates:
-            raise ValueError(f"no instance can serve model {g.model}")
+            # submit() rejects unservable models and mark_dead()
+            # quarantines orphans before re-placing, so this is a
+            # controller bug, not load
+            raise ValueError(f"no alive instance can serve model {g.model}")
         wl = g.workload_profile()
 
         def drain(i):
@@ -133,9 +388,12 @@ class QLMController:
 
     # ------------------------------------------------------------------
     def reschedule(self, now: float):
+        """Re-solve over the ALIVE instances only: dead VQs were emptied
+        at mark_dead() and must stay empty."""
         self.gc_groups()
         self._last_reschedule = now
-        return self.scheduler.schedule(self.groups, self.instances, now)
+        return self.scheduler.schedule(self.groups, self.alive_instances(),
+                                       now)
 
     def tick(self, now: float) -> bool:
         """Periodic violation check (returns True if it rescheduled).
@@ -146,11 +404,12 @@ class QLMController:
         group heads, firing the agents' head-change eviction LSO) without
         any new information to act on.
         """
+        self.check_heartbeats(now)
         if now - self._last_reschedule < self.cfg.reschedule_cooldown:
             self._check_invariants()
             return False
         rescheduled = False
-        if self.scheduler.predict_violation(self.instances, now):
+        if self.scheduler.predict_violation(self.alive_instances(), now):
             self.reschedule(now)
             rescheduled = True
         self._check_invariants()
@@ -169,8 +428,11 @@ class QLMController:
             from repro.analysis.invariants import InvariantSampler
             self._inv_sampler = InvariantSampler()
         if self._inv_sampler.due():
-            from repro.analysis.invariants import check_queue_layer
+            from repro.analysis.invariants import (check_queue_layer,
+                                                   check_terminal_states)
             check_queue_layer(self, where="controller.tick")
+            check_terminal_states(self, engines=self._engines,
+                                  where="controller.tick")
 
     def gc_groups(self) -> None:
         self.groups = [g for g in self.groups if not g.done()]
@@ -197,6 +459,12 @@ class QLMController:
         """
         scored = hits = 0
         for r in self.all_requests() + self.rejected:
+            # failed-quarantined is checked FIRST: a poison request may
+            # have produced an in-SLO first token before killing its
+            # engines — it still failed the client (unconditional miss)
+            if r.failed:
+                scored += 1
+                continue
             met = r.slo_met()
             if met is not None:
                 scored += 1

@@ -66,8 +66,20 @@ class Request:
     rejected: bool = False           # 429'd by admission control / backpressure
     expired: bool = False            # deadline passed before any dispatch
     shed: bool = False               # dropped by the SLO-pressure shedder
+    # fault tolerance (§4: the global queue survives engine death):
+    # redelivery count, earliest re-dispatch time (exponential backoff),
+    # and the poison-quarantine terminal flag — a request whose retry
+    # budget is exhausted is FAILED, a recorded SLO miss, never retried
+    redeliveries: int = 0
+    not_before: float = 0.0
+    failed: bool = False
+    fail_cause: Optional[str] = None
     # scheduling flag: currently in a running batch
     _in_flight: bool = False
+    # instance id currently serving this request (set by the pulling
+    # agent, cleared on every path that returns it to the queue) — the
+    # supervisor uses it to find a dead engine's in-flight requests
+    _served_by: Optional[int] = None
     # chunked-prefill progress kept across evictions (simulator mirror of
     # the engine's snapshot["prefill_pos"])
     _prefill_done: int = 0
@@ -103,11 +115,26 @@ class Request:
 
     def dropped(self) -> bool:
         """Terminated without service: rejected at the door, expired past
-        its deadline unstarted, shed by the overload policy, or cancelled
-        before the first token.  A definite SLO miss (except client
-        cancellation, which is excluded from attainment accounting)."""
-        return (self.rejected or self.expired or self.shed
+        its deadline unstarted, shed by the overload policy, quarantined
+        after exhausting its redelivery budget, or cancelled before the
+        first token.  A definite SLO miss (except client cancellation,
+        which is excluded from attainment accounting)."""
+        return (self.rejected or self.expired or self.shed or self.failed
                 or (self.cancelled and self.first_token_time is None))
+
+    def restart(self) -> None:
+        """Clean-restart for redelivery after its serving engine died with
+        the generation state (no snapshot survived): generation progress
+        resets so the next engine replays from the prompt.  Greedy decode
+        is deterministic, so the regenerated tokens match what any client
+        already streamed.  ``first_token_time`` is KEPT when already
+        recorded — the first token genuinely reached the client, and
+        resetting it would let a crash-and-retry double-count as a fresh
+        (later, possibly SLO-missing) first token in attainment."""
+        self.output_tokens.clear()
+        self.generated = 0
+        self._prefill_done = 0
+        self.snapshot = None
 
 
 def make_request(prompt_tokens, model: str, slo_class: str,

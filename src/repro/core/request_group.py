@@ -61,12 +61,19 @@ class RequestGroup:
                 n += 1
         return n
 
-    def next_pending(self, *, skip_in_flight: bool = True) -> Optional[Request]:
+    def next_pending(self, *, skip_in_flight: bool = True,
+                     now: Optional[float] = None) -> Optional[Request]:
+        """FCFS head of the group's waiting requests.  ``now`` enables the
+        redelivery backoff gate: a request returned to the queue by an
+        engine failure carries ``not_before`` and is skipped (not popped —
+        FCFS order is preserved) until its backoff expires."""
         c = self._advance()
         for r in self.requests[c:]:
             if r.finished():
                 continue
             if skip_in_flight and getattr(r, "_in_flight", False):
+                continue
+            if now is not None and getattr(r, "not_before", 0.0) > now:
                 continue
             return r
         return None

@@ -28,12 +28,17 @@ class VirtualQueue:
     def set_order(self, groups: List[RequestGroup]) -> None:
         self.groups = [g for g in groups if not g.done()]
 
-    def next_request(self, model: Optional[str] = None) -> Optional[Request]:
+    def next_request(self, model: Optional[str] = None,
+                     now: Optional[float] = None) -> Optional[Request]:
         """§5 Request Pulling: FCFS within the head group; when every head
         request is already in flight, pulling continues into subsequent
         groups (continuous batching keeps the device fed) — but stops at the
         first group whose model differs from the loaded one (``model``),
         since serving it requires a swap decision by the global scheduler.
+
+        ``now`` gates redelivered requests still in exponential backoff
+        (``Request.not_before``): they are skipped, not dropped, so the
+        pull continues past them and the slot goes to servable work.
         """
         self.head_group()  # drop completed head groups
         for g in self.groups:
@@ -41,7 +46,7 @@ class VirtualQueue:
                 continue
             if model is not None and g.model != model:
                 return None  # swap boundary
-            r = g.next_pending()  # arrival-ordered (FCFS inside group)
+            r = g.next_pending(now=now)  # arrival-ordered (FCFS inside group)
             if r is not None:
                 return r
         return None

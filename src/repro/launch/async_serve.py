@@ -211,6 +211,13 @@ async def run_async(args, registry, hw_by_model, arch_names) -> dict:
         "mean_tokens_per_accepted": fs.mean_tokens_per_accepted,
         "max_queue_depth": fs.max_queue_depth,
         "backpressure_engagements": fs.backpressure_engagements,
+        "rejected_unservable": fs.rejected_unservable,
+        "rejected_capacity": fs.rejected_capacity,
+        "engine_failures": fs.engine_failures,
+        "redeliveries": controller.redeliveries,
+        "failed_quarantined": len(controller.failed),
+        "dead_instances": sum(1 for i in range(len(controller.instances))
+                              if not controller.is_alive(i)),
         "kv_blocks_leaked": sum(
             f0 - e.block_mgr.free_blocks
             for f0, e in zip(free0, engines)),

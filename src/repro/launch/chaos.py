@@ -1,0 +1,292 @@
+"""Chaos soak driver: seeded engine-failure injection against the live
+QLM stack (the acceptance harness for §4 fault tolerance).
+
+Runs N real JAX engines wrapped in ``serving.faults.FaultyEngine`` under
+a seeded ``FaultPlan`` (default: kill one engine mid-decode), drives a
+deterministic round loop on a VIRTUAL clock, and asserts the recovery
+contract:
+
+  * every submitted request reaches a terminal state (served, rejected,
+    or failed-quarantined) — nothing strands;
+  * BlockManager accounting is conserved on every engine INCLUDING the
+    dead one (abandoned slots freed, snapshot pins released — zero
+    leaked or pinned-forever blocks);
+  * interactive SLO attainment stays above a floor despite the death;
+  * the same seed replays the identical fault timeline
+    (``--replay-check`` runs the soak twice and compares).
+
+``--no-supervision`` runs the same fault schedule with the recovery
+machinery disabled (failures swallowed, no redelivery): requests strand,
+proving the harness detects exactly what the supervision layer fixes.
+
+Run it under ``QLINT_INVARIANTS=1`` so every engine round and controller
+tick double-checks the block/queue/terminal-state invariants:
+
+  PYTHONPATH=src QLINT_INVARIANTS=1 python -m repro.launch.chaos \
+      --replay-check --json CHAOS_stats.json --timeline CHAOS_timeline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+import numpy as np
+
+from repro.analysis.invariants import (check_block_manager, check_queue_layer,
+                                       check_terminal_states)
+from repro.configs import get_arch
+from repro.core.global_scheduler import InstanceInfo
+from repro.core.lso import QLMAgent
+from repro.core.qlm import QLMConfig, QLMController
+from repro.core.request import make_request
+from repro.core.rwt_estimator import HardwareProfile
+from repro.core.virtual_queue import VirtualQueue
+from repro.models import build_model
+from repro.serving import (ContinuousBatchingEngine, EngineConfig,
+                           EngineFailure, FaultPlan, FaultSpec, FaultyEngine)
+
+
+class VirtualClock:
+    """Deterministic time source: the round loop advances it explicitly,
+    so timelines, backoff windows, and TTFTs are replayable bit-for-bit
+    (wall time would smear the fault schedule across runs)."""
+
+    def __init__(self, t0: float = 0.0):
+        self.t = t0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        self.t += dt
+        return self.t
+
+
+def _hw(max_new: int) -> HardwareProfile:
+    # static profile (no calibration pass): the soak measures recovery
+    # behavior, not scheduling quality, and static costs keep it seeded
+    return HardwareProfile(prefill_time=0.05, decode_per_token=0.02,
+                           inefficiency=1.2, token_capacity=512,
+                           swap_time=0.2, model_max_tokens=max(64, max_new))
+
+
+def default_plan(args) -> FaultPlan:
+    specs = [FaultSpec(site=args.site, kind="crash", engine=args.kill_engine,
+                       at_count=args.kill_at)]
+    if args.error_prob > 0:
+        # probabilistic transient errors on the surviving engine exercise
+        # the strike/heartbeat-recovery path alongside the hard kill
+        specs.append(FaultSpec(site="round", kind="error", engine=None,
+                               prob=args.error_prob, max_fires=2))
+    return FaultPlan(specs, seed=args.seed)
+
+
+def build_cluster(args, plan: FaultPlan):
+    import jax
+    cfg = get_arch(args.arch).reduced(num_layers=1, d_model=64)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(args.seed))
+    registry = {args.arch: (model, params)}
+    clock = VirtualClock()
+    ecfg = EngineConfig(max_slots=args.slots, max_seq_len=128, block_size=8,
+                        attention_backend="paged-xla", prefix_sharing=True)
+    engines, agents, infos = [], [], []
+    for i in range(args.instances):
+        inner = ContinuousBatchingEngine(model, params, ecfg,
+                                         model_name=args.arch, clock=clock)
+        eng = FaultyEngine(inner, plan, engine_id=i)
+        vq = VirtualQueue(i)
+        agents.append(QLMAgent(eng, vq, registry))
+        engines.append(eng)
+        infos.append(InstanceInfo(i, {args.arch: _hw(args.max_new_tokens)},
+                                  args.arch, vq))
+    controller = QLMController(infos, QLMConfig(
+        avg_batch_size=args.slots, reschedule_cooldown=0.5,
+        retry_budget=args.retry_budget, backoff_base_s=0.05,
+        backoff_cap_s=1.0))
+    controller.attach_engines(engines)
+    return clock, engines, agents, controller
+
+
+def build_requests(args) -> List:
+    rng = np.random.default_rng(args.seed)
+    classes = ["interactive", "interactive", "batch1"]
+    arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
+    reqs = []
+    for i in range(args.requests):
+        prompt = rng.integers(0, 100, size=int(rng.integers(6, 20))).tolist()
+        reqs.append(make_request(prompt, args.arch, classes[i % len(classes)],
+                                 arrival_time=float(arrivals[i]),
+                                 max_new_tokens=args.max_new_tokens))
+    return reqs
+
+
+def _terminal(r) -> bool:
+    return r.finished() or r.dropped()
+
+
+def run_soak(args, plan: Optional[FaultPlan] = None) -> dict:
+    """One seeded soak run.  Returns the stats dict (pure data — the
+    CLI's assertions live in main() so tests can call this directly)."""
+    plan = default_plan(args) if plan is None else plan
+    clock, engines, agents, controller = build_cluster(args, plan)
+    reqs = build_requests(args)
+    pending = list(reqs)
+
+    supervision = not args.no_supervision
+    rounds = failures = 0
+    while rounds < args.max_rounds:
+        rounds += 1
+        now = clock.advance(args.round_dt)
+        while pending and pending[0].arrival_time <= now:
+            controller.submit(pending.pop(0), now)
+        controller.tick(now)
+        for idx, agent in enumerate(agents):
+            if not controller.is_alive(idx):
+                continue
+            if not supervision and agent.engine.dead:
+                continue   # unsupervised: the controller never learns
+            try:
+                agent.run_iteration()
+            except EngineFailure as e:
+                failures += 1
+                if supervision:
+                    controller.report_engine_failure(idx, e, now,
+                                                     engine=agent.engine)
+                    agent.reset()
+            else:
+                if supervision:
+                    controller.heartbeat(idx, now)
+        if not pending and all(_terminal(r) for r in reqs):
+            break
+
+    now = clock()
+    controller.gc_groups()
+    # end-state invariants (always on here, env var or not): conservation
+    # must hold on EVERY pool — the dead engine's accounting was salvaged
+    # host-side, so it conserves too
+    leaked = []
+    for idx, eng in enumerate(engines):
+        bm = eng.block_mgr
+        check_block_manager(bm, where=f"chaos/engine{idx}")
+        leaked.extend(f"engine{idx}:seq{sid}" for sid in bm._seqs
+                      if controller.is_alive(idx) or supervision)
+        leaked.extend(f"engine{idx}:pin{b}" for b, p in bm._pins.items()
+                      if p > 0)
+    if supervision:
+        check_queue_layer(controller, where="chaos/end")
+        check_terminal_states(controller, engines=engines, where="chaos/end")
+
+    stranded = [r for r in reqs if not _terminal(r)]
+    interactive = [r for r in reqs if r.slo_class == "interactive"]
+    inter_hits = sum(1 for r in interactive
+                     if not r.failed and r.slo_met() is True)
+    stats = {
+        "seed": args.seed,
+        "supervision": supervision,
+        "rounds": rounds,
+        "requests": len(reqs),
+        "served": sum(1 for r in reqs if r.finished() and not r.failed
+                      and not r.rejected),
+        "failed_quarantined": len(controller.failed),
+        "rejected": len(controller.rejected),
+        "stranded": len(stranded),
+        "redeliveries": controller.redeliveries,
+        "engine_failures": failures,
+        "dead_instances": [i for i in range(len(engines))
+                           if not controller.is_alive(i)],
+        "health": [h.state for h in controller.health],
+        "leaked_blocks": leaked,
+        "slo_attainment": controller.slo_attainment(now),
+        "interactive_attainment": (inter_hits / len(interactive)
+                                   if interactive else 1.0),
+        "timeline": plan.timeline(),
+    }
+    return stats
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--instances", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--rate", type=float, default=8.0)
+    ap.add_argument("--max-new-tokens", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--site", default="decode",
+                    choices=["decode", "prefill", "swap", "materialize",
+                             "round"])
+    ap.add_argument("--kill-engine", type=int, default=1)
+    ap.add_argument("--kill-at", type=int, default=4,
+                    help="kill at the Nth occurrence of --site on "
+                         "--kill-engine (occurrence counts, not wall "
+                         "time: that is what makes the timeline seeded)")
+    ap.add_argument("--error-prob", type=float, default=0.0,
+                    help="per-round transient-error probability (strikes)")
+    ap.add_argument("--retry-budget", type=int, default=2)
+    ap.add_argument("--round-dt", type=float, default=0.05,
+                    help="virtual seconds per round")
+    ap.add_argument("--max-rounds", type=int, default=3000)
+    ap.add_argument("--attainment-floor", type=float, default=0.5,
+                    help="minimum interactive attainment despite the kill")
+    ap.add_argument("--no-supervision", action="store_true",
+                    help="faults on, recovery off: assert requests STRAND "
+                         "(the harness detects what the machinery fixes)")
+    ap.add_argument("--replay-check", action="store_true",
+                    help="run twice from the same seed and require "
+                         "identical fault timelines")
+    ap.add_argument("--json", default=None, help="write final stats JSON")
+    ap.add_argument("--timeline", default=None,
+                    help="write the fault timeline JSON")
+    args = ap.parse_args(argv)
+
+    stats = run_soak(args)
+    failures: List[str] = []
+    if args.no_supervision:
+        if stats["stranded"] == 0:
+            failures.append(
+                "no-supervision run stranded nothing: the fault plan "
+                "never hit live work (harness bug)")
+    else:
+        if stats["stranded"]:
+            failures.append(f"{stats['stranded']} request(s) stranded "
+                            f"non-terminal")
+        if stats["leaked_blocks"]:
+            failures.append(f"leaked KV accounting: {stats['leaked_blocks']}")
+        if not stats["dead_instances"]:
+            failures.append("fault plan killed no engine (kill-at never "
+                            "reached: raise --requests or lower --kill-at)")
+        if stats["interactive_attainment"] < args.attainment_floor:
+            failures.append(
+                f"interactive attainment {stats['interactive_attainment']:.3f}"
+                f" below floor {args.attainment_floor}")
+        if args.replay_check:
+            replay = run_soak(args)
+            if replay["timeline"] != stats["timeline"]:
+                failures.append(
+                    f"replay diverged: {stats['timeline']} vs "
+                    f"{replay['timeline']}")
+            else:
+                stats["replay_identical"] = True
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(stats, f, indent=2)
+    if args.timeline:
+        with open(args.timeline, "w") as f:
+            json.dump({"seed": args.seed, "events": stats["timeline"]}, f,
+                      indent=2)
+    for k, v in stats.items():
+        if k != "timeline":
+            print(f"{k:24s} {v:.3f}" if isinstance(v, float)
+                  else f"{k:24s} {v}")
+    for msg in failures:
+        print(f"CHAOS FAIL: {msg}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

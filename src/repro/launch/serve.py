@@ -57,14 +57,18 @@ def summarize(reqs, controller, engines, t_start: float, now: float) -> dict:
     still queued past their deadline at ``now``) are SLO misses, not
     silently excluded."""
     import numpy as np
-    served = [r for r in reqs if r.ttft() is not None]
-    dropped = [r for r in reqs if r.ttft() is None
+    # failed-quarantined requests are unconditional misses even when a
+    # pre-crash first token landed in time (QLMController.slo_attainment
+    # scores them the same way)
+    failed = [r for r in reqs if r.failed]
+    served = [r for r in reqs if r.ttft() is not None and not r.failed]
+    dropped = [r for r in reqs if r.ttft() is None and not r.failed
                and (r.dropped() or now > r.deadline)]
     # rejections the caller's request list doesn't already cover (the
     # async path records rejections on requests that ARE in reqs)
     known = {id(r) for r in reqs}
     extra_rej = [r for r in controller.rejected if id(r) not in known]
-    scored = len(served) + len(dropped) + len(extra_rej)
+    scored = len(served) + len(dropped) + len(extra_rej) + len(failed)
     met = sum(1 for r in served if r.slo_met())
     done_times = [r.completion_time for r in reqs if r.completion_time]
     span = max(max(done_times, default=now) - t_start, 1e-9)
@@ -73,6 +77,13 @@ def summarize(reqs, controller, engines, t_start: float, now: float) -> dict:
         "served": len(served),
         "rejected": len(extra_rej) + sum(1 for r in reqs if r.rejected),
         "dropped_unserved": len(dropped),
+        "failed": len(failed),
+        # getattr: summarize also accepts stub controllers without the
+        # supervision layer (qlint regression tests, older drivers)
+        "redeliveries": getattr(controller, "redeliveries", 0),
+        "dead_instances": sum(1 for i in range(len(controller.instances))
+                              if not controller.is_alive(i))
+        if hasattr(controller, "is_alive") else 0,
         # vacuous attainment is 1.0 (QLMController.slo_attainment): a
         # zero-request or all-unscored run met every SLO it was given,
         # and 0.0 would trip "attainment below threshold" alerting

@@ -1,4 +1,7 @@
 from repro.serving.engine import ContinuousBatchingEngine, EngineConfig, EngineStats
+from repro.serving.faults import (EngineCrashed, EngineDead, EngineFailure,
+                                  FaultPlan, FaultSpec, FaultyEngine,
+                                  TransientEngineError)
 from repro.serving.frontend import (AsyncServer, FrontendConfig,
                                     FrontendStats, RequestStream, run_session)
 from repro.serving.kv_cache import BlockManager, OutOfBlocksError
@@ -6,4 +9,6 @@ from repro.serving.kv_cache import BlockManager, OutOfBlocksError
 __all__ = ["ContinuousBatchingEngine", "EngineConfig", "EngineStats",
            "BlockManager", "OutOfBlocksError",
            "AsyncServer", "FrontendConfig", "FrontendStats", "RequestStream",
-           "run_session"]
+           "run_session",
+           "EngineFailure", "EngineCrashed", "EngineDead",
+           "TransientEngineError", "FaultSpec", "FaultPlan", "FaultyEngine"]

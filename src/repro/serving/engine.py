@@ -955,6 +955,34 @@ class ContinuousBatchingEngine:
             out.append(req)
         return out
 
+    def abandon(self) -> List[Request]:
+        """Crash salvage (``serving.faults`` / ``QLMController.mark_dead``):
+        reclaim every resident request WITHOUT stamping it terminal — the
+        requests go back to the global queue for redelivery, so unlike
+        ``_cancel_slot`` this sets no ``cancelled`` / ``completion_time``.
+        Host-side bookkeeping only: the pool's contents are garbage after
+        a crash, so no device compute runs, and pending COW page copies
+        are dropped with the pool (their destinations are freed here, not
+        handed to a future owner).  Returns the abandoned requests —
+        resident slots plus any pushback limbo — with ``_in_flight``
+        cleared and BlockManager accounting conserved (every allocation
+        freed)."""
+        out: List[Request] = []
+        self.block_mgr._cow_ops.clear()
+        for i in self.active_slots():
+            req = self.slots[i]
+            self.block_mgr.free(req.req_id)
+            self.slots[i] = None
+            self.lengths[i] = 0
+            self.prefill_pos[i] = 0
+            req._in_flight = False
+            out.append(req)
+        pushed = self.take_pushback()
+        if pushed is not None:
+            pushed._in_flight = False
+            out.append(pushed)
+        return out
+
     def _materialize_pinned_snapshots(self) -> None:
         """Promote every still-live pinned snapshot to a self-contained one:
         copy the pinned pages' CONTENTS into the snapshot (prepended before

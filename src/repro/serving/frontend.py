@@ -60,9 +60,10 @@ import time
 from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Tuple
 
 from repro.core.autoscale import AdmissionController
-from repro.core.qlm import QLMController
+from repro.core.qlm import DEAD, QLMController
 from repro.core.request import SLO_INTERACTIVE, Request
 from repro.core.rwt_estimator import WorkloadProfile
+from repro.serving.faults import EngineFailure
 
 if TYPE_CHECKING:  # lso imports serving.engine — avoid the import cycle
     from repro.core.lso import QLMAgent
@@ -118,6 +119,9 @@ class FrontendStats:
     rejected_backpressure: int = 0   # watermark shed of batch arrivals
     rejected_admission: int = 0      # RWT drain gate
     rejected_deadline: int = 0       # dead on arrival (deadline already past)
+    rejected_unservable: int = 0     # 400-style: no alive instance serves it
+    rejected_capacity: int = 0       # 503-style: capacity-scaled queue bound
+    engine_failures: int = 0         # agent iterations that raised
     expired: int = 0                 # deadline passed while queued
     cancelled: int = 0               # client cancellations executed
     shed_deferred: int = 0           # running slots evicted by the shedder
@@ -131,7 +135,8 @@ class FrontendStats:
     @property
     def rejected(self) -> int:
         return (self.rejected_full + self.rejected_backpressure
-                + self.rejected_admission + self.rejected_deadline)
+                + self.rejected_admission + self.rejected_deadline
+                + self.rejected_unservable + self.rejected_capacity)
 
     # Every rate below guards its denominator: a zero-request run (or a
     # run where everything was rejected) must report clean numbers, not
@@ -204,6 +209,8 @@ class RequestStream:
         r = self.request
         if r.rejected:
             return "rejected"
+        if r.failed:
+            return "failed"       # quarantined after engine death(s)
         if r.expired:
             return "expired"
         if r.shed:
@@ -252,6 +259,10 @@ class AsyncServer:
         self._last_shed = -1e18
         self._last_tick = -1e18
         self._admission: Dict[tuple, AdmissionController] = {}
+        # supervision: the controller reclaims a dead engine's resident
+        # requests (mark_dead -> abandon) and the terminal-state invariant
+        # cross-checks engine residency
+        controller.attach_engines(self.engines)
 
     # -- context manager ---------------------------------------------------
     async def __aenter__(self) -> "AsyncServer":
@@ -275,8 +286,20 @@ class AsyncServer:
     def _is_interactive(self, req: Request) -> bool:
         return req.slo <= self.cfg.interactive_slo_ceiling
 
-    def _update_backpressure(self, depth: int) -> None:
+    def _scaled_limits(self) -> Tuple[int, int, int]:
+        """(hard cap, high, low) scaled by the alive-capacity fraction:
+        when engines die, the queue the survivors can drain in the same
+        time shrinks proportionally, so the watermarks tighten and excess
+        arrivals shed 503-style instead of stranding past their SLOs."""
         high, low = self.cfg.resolved_watermarks()
+        frac = self.controller.alive_fraction()
+        if frac >= 1.0:
+            return self.cfg.queue_depth, high, low
+        cap = max(1, int(self.cfg.queue_depth * frac))
+        return cap, max(1, int(high * frac)), int(low * frac)
+
+    def _update_backpressure(self, depth: int) -> None:
+        _, high, low = self._scaled_limits()
         if not self._backpressure and depth >= high:
             self._backpressure = True
             self.stats.backpressure_engagements += 1
@@ -322,19 +345,24 @@ class AsyncServer:
             self._task.result()  # re-raises the serve loop's crash
         if self._stopping:
             return self._reject(req, now, "rejected_full")
-        # raises like controller.submit would: a model NO instance serves
-        # is a deployment error, not load
-        if not any(req.model in i.hw_by_model
-                   for i in self.controller.instances):
-            raise ValueError(f"no instance can serve model {req.model}")
+        # 400-style: a model no ALIVE instance serves gets a recorded
+        # rejection (an attainment miss), not an exception — one bad
+        # request or a dead engine pool must not kill the serve loop
+        if not self.controller.can_serve(req.model):
+            return self._reject(req, now, "rejected_unservable")
         if now > req.deadline:
             req.expired = True
             return self._reject(req, now, "rejected_deadline")
         depth = self.queue_depth()
         self.stats.max_queue_depth = max(self.stats.max_queue_depth, depth)
+        cap, _, _ = self._scaled_limits()
         self._update_backpressure(depth)
-        if depth >= self.cfg.queue_depth:
-            return self._reject(req, now, "rejected_full")
+        if depth >= cap:
+            # 503-style when the bound shrank with lost capacity,
+            # 429-style at the configured hard cap
+            return self._reject(req, now, "rejected_capacity"
+                                if cap < self.cfg.queue_depth
+                                else "rejected_full")
         if self._backpressure and not self._is_interactive(req):
             return self._reject(req, now, "rejected_backpressure")
         if not self._admission_gate(req, depth):
@@ -349,11 +377,13 @@ class AsyncServer:
     def _terminate(self, req: Request, now: float) -> None:
         """Free any engine-side state (slot / snapshot) for a request that
         will never run again, then stamp it finished so group cursors
-        skip it."""
-        for eng in self.engines:
-            if eng.cancel_request(req):
+        skip it.  Dead engines are skipped: their state was reclaimed by
+        ``mark_dead`` and there is nothing left to cancel."""
+        for idx, eng in enumerate(self.engines):
+            if self.controller.is_alive(idx) and eng.cancel_request(req):
                 break
         req._in_flight = False
+        req._served_by = None
         if req.completion_time is None:
             req.completion_time = now
 
@@ -382,10 +412,16 @@ class AsyncServer:
         # walk is O(groups) of estimator math, far too hot for every
         # engine iteration
         self._last_shed = now
-        infos = self.controller.instances
+        # alive (instance, agent) pairs: a dead engine has no slots to
+        # shed, and misaligning infos with agents would read the wrong
+        # engine's inflight drain
+        pairs = [(inst, agent) for idx, (inst, agent)
+                 in enumerate(zip(self.controller.instances, self.agents))
+                 if self.controller.is_alive(idx)]
+        infos = [inst for inst, _ in pairs]
         hot = self.controller.scheduler.violations(
             infos, now, slo_ceiling=cfg.interactive_slo_ceiling,
-            inflight=self._inflight_drain(infos))
+            inflight=self._inflight_drain(pairs))
         ceiling = cfg.interactive_slo_ceiling
         for inst in infos:
             vq = inst.virtual_queue
@@ -433,13 +469,14 @@ class AsyncServer:
                 return True
         return False
 
-    def _inflight_drain(self, infos) -> List[float]:
+    def _inflight_drain(self, pairs) -> List[float]:
         """Seconds until each instance's engine can free a slot — the VQ
         walk's seed.  0 when a slot is already free; otherwise the fastest
         running request's remaining decode (a queued request cannot start
-        sooner than that)."""
+        sooner than that).  Takes (instance, agent) PAIRS so a filtered
+        alive subset stays aligned with its engines."""
         out = []
-        for inst, agent in zip(infos, self.agents):
+        for inst, agent in pairs:
             eng = agent.engine
             running = eng.running_requests()
             hw = inst.hw_by_model.get(eng.model_name)
@@ -497,10 +534,26 @@ class AsyncServer:
                 self._last_tick = now
                 self.controller.tick(now)
             busy = False
-            for inst, agent in zip(self.controller.instances, self.agents):
+            for idx, (inst, agent) in enumerate(
+                    zip(self.controller.instances, self.agents)):
+                if not self.controller.is_alive(idx):
+                    continue
                 inst.current_model = agent.engine.model_name
-                # qlint: disable=blocking-in-async -- the loop owns the engines: cancel/evict/shed paths run between awaits and must never overlap an engine round, so the round runs inline (single host thread; offloading would race them)
-                agent.run_iteration()
+                try:
+                    # qlint: disable=blocking-in-async -- the loop owns the engines: cancel/evict/shed paths run between awaits and must never overlap an engine round, so the round runs inline (single host thread; offloading would race them)
+                    agent.run_iteration()
+                except EngineFailure as e:
+                    # supervision: crashes kill the instance (its requests
+                    # are redelivered from the global queue), transient
+                    # errors strike it.  Anything else — a real bug, an
+                    # InvariantViolation — still propagates and aborts
+                    # every stream (fail loudly, not around).
+                    self.stats.engine_failures += 1
+                    if self.controller.report_engine_failure(
+                            idx, e, now, engine=agent.engine) == DEAD:
+                        agent.reset()
+                    continue
+                self.controller.heartbeat(idx, now)
                 busy |= agent.engine.num_active() > 0
             self._pump_tokens()
             self.stats.iterations += 1

@@ -142,10 +142,14 @@ def test_rejected_stream_terminates_immediately():
         s = await srv.submit(_req(seed=1))
         assert s.status == "rejected"
         assert await s.drain() == []                   # terminates, no hang
-        with pytest.raises(ValueError, match="no instance can serve"):
-            await srv.submit(make_request([1, 2], "no-such-model",
-                                          "batch1",
-                                          arrival_time=time.monotonic()))
+        # unservable model: 400-style recorded rejection, never an
+        # exception out of the serve path
+        bad = await srv.submit(make_request([1, 2], "no-such-model",
+                                            "batch1",
+                                            arrival_time=time.monotonic()))
+        assert bad.status == "rejected"
+        assert srv.stats.rejected_unservable == 1
+        assert await bad.drain() == []
 
     asyncio.run(go())
 

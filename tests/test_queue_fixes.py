@@ -169,10 +169,16 @@ def test_submit_replaces_group_absent_from_all_vqs():
 # satellite 4: unservable models
 # ---------------------------------------------------------------------------
 
-def test_submit_raises_when_no_instance_serves_model():
+def test_submit_rejects_when_no_instance_serves_model():
+    """An unservable model is a recorded 400-style rejection (an
+    attainment miss), not an exception out of the serve path."""
     c = _controller([_instance(0, ["m1"])])
-    with pytest.raises(ValueError, match="no instance can serve"):
-        c.submit(make_request([1, 2], "m2", "batch1", arrival_time=0.0), 0.0)
+    r = make_request([1, 2], "m2", "batch1", arrival_time=0.0)
+    assert c.submit(r, 0.0) is False
+    assert r.rejected and r.finished()
+    assert r in c.rejected
+    assert not c.global_queue and not c.groups   # never admitted
+    assert c.slo_attainment() < 1.0
 
 
 def test_predict_violation_skips_unservable_group():
