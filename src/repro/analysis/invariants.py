@@ -331,12 +331,14 @@ def check_engine(engine: Any, *, where: str = "engine") -> None:
 # ---------------------------------------------------------------------------
 def _alive_flags(controller: Any) -> List[bool]:
     """Per-instance liveness; controllers without supervision (pre-fault-
-    tolerance callers, stub controllers in tests) read as all-alive."""
+    tolerance callers, stub controllers in tests) read as all-alive.
+    DRAINING counts alive (its residents are still finishing); DEAD and
+    DRAINED are departed."""
     n = len(controller.instances)
     health = getattr(controller, "health", None)
     if health is None:
         return [True] * n
-    flags = [h.state != "dead" for h in health]
+    flags = [h.state not in ("dead", "drained") for h in health]
     # callers may grow controller.instances after construction (tests,
     # scale-up): unsupervised extras read as alive
     flags += [True] * (n - len(flags))
@@ -354,11 +356,12 @@ def check_queue_layer(controller: Any, *, where: str = "queue-layer") -> None:
             undone = [g for g in vq.groups if not g.done()]
             if undone:
                 _fail(where,
-                      f"DEAD instance {vq.instance_id} still holds "
-                      f"{len(undone)} group(s) "
-                      f"{[g.group_id for g in undone]}: mark_dead must "
-                      f"empty the virtual queue and nothing may re-place "
-                      f"onto a dead instance")
+                      f"departed (dead/drained) instance "
+                      f"{vq.instance_id} still holds {len(undone)} "
+                      f"group(s) {[g.group_id for g in undone]}: "
+                      f"mark_dead/_finish_drains must empty the virtual "
+                      f"queue and nothing may re-place onto a departed "
+                      f"instance")
             continue
         for g in vq.groups:
             placements.setdefault(id(g), []).append(vq.instance_id)
@@ -507,6 +510,93 @@ def check_terminal_states(controller: Any, engines: Optional[List[Any]] = None,
             _fail(where, f"{rid} is waiting (non-terminal, not in flight) "
                          f"but {state} — engine death must redeliver or "
                          f"quarantine every in-flight request")
+
+
+# ---------------------------------------------------------------------------
+# Cross-engine snapshot migration (self-healing cluster lifecycle)
+# ---------------------------------------------------------------------------
+def check_migration(controller: Any, engines: Optional[List[Any]] = None,
+                    *, where: str = "migration") -> None:
+    """Migration-state conservation at tick boundaries:
+
+    * a request is RESIDENT (slot or pushback) on at most one engine —
+      a migrated request must not be running on both its source and its
+      destination;
+    * a resident request carries no live-pinned snapshot — once the
+      destination's pages are live, the source's pins must have been
+      released (transferred on same-engine resume, materialized away on
+      migration), otherwise the source pool pins pages forever;
+    * a QUEUED request's pinned snapshot must point at an ALIVE attached
+      engine's current pool and epoch — pins into a departed or reset
+      pool are dangling (mark_dead / migration_sweep must release them
+      and restart the request).
+    """
+    alive = _alive_flags(controller)
+    if engines is not None:
+        homes: Dict[int, List[str]] = {}
+        for idx, eng in enumerate(engines):
+            if eng is None or idx >= len(alive) or not alive[idx]:
+                continue
+            for slot, r in enumerate(eng.slots):
+                if r is not None:
+                    homes.setdefault(id(r), []).append(
+                        f"engine {idx} slot {slot}")
+            pushed = getattr(eng, "_pushback", None)
+            if pushed is not None:
+                homes.setdefault(id(pushed), []).append(
+                    f"engine {idx} pushback")
+        by_id = {}
+        for eng in engines:
+            if eng is None:
+                continue
+            for r in list(eng.slots) + [getattr(eng, "_pushback", None)]:
+                if r is not None:
+                    by_id[id(r)] = r
+        for rid, places in homes.items():
+            if len(places) > 1:
+                r = by_id[rid]
+                _fail(where,
+                      f"request {r.req_id} (model {r.model}) is resident "
+                      f"in {len(places)} engines at once: {places} — a "
+                      f"migrated request must run on exactly one engine")
+            r = by_id[rid]
+            snap = getattr(r, "snapshot", None)
+            if isinstance(snap, dict) and snap.get("pinned"):
+                _fail(where,
+                      f"request {r.req_id} is resident ({places[0]}) but "
+                      f"its snapshot still pins {len(snap['pinned'])} "
+                      f"block(s) in a source pool: source pins must be "
+                      f"released iff destination pages are live")
+
+    # queued pinned snapshots must have a live owner pool + epoch
+    pools = {}
+    if engines is not None:
+        for idx, eng in enumerate(engines):
+            bm = getattr(eng, "block_mgr", None)
+            if bm is not None:
+                pools[id(bm)] = (idx, bm)
+    for r in controller.global_queue:
+        if r.finished() or getattr(r, "_in_flight", False):
+            continue
+        snap = getattr(r, "snapshot", None)
+        if not isinstance(snap, dict) or not snap.get("pinned"):
+            continue
+        owner = snap.get("pin_owner")
+        entry = pools.get(id(owner)) if engines is not None else None
+        if engines is None:
+            continue   # no residency info: owner liveness unknowable here
+        if entry is None or entry[0] >= len(alive) or not alive[entry[0]]:
+            _fail(where,
+                  f"request {r.req_id} (model {r.model}) holds a snapshot "
+                  f"pinned in a departed/unattached pool: mark_dead or "
+                  f"the migration sweep must release dead pins and "
+                  f"restart the request")
+        elif snap.get("pin_epoch") != getattr(owner, "epoch", None):
+            _fail(where,
+                  f"request {r.req_id} (model {r.model}) holds a snapshot "
+                  f"pinned at a stale pool epoch "
+                  f"{snap.get('pin_epoch')} != {getattr(owner, 'epoch', None)}: "
+                  f"the pages were reset under it")
 
 
 # ---------------------------------------------------------------------------

@@ -53,13 +53,31 @@ class QLMConfig:
     # supervisor gives up on the instance; any successful heartbeat
     # resets the strike counter.
     transient_strikes: int = 3
+    # -- round watchdog (hang detection) ------------------------------
+    # Success-only heartbeats cannot see a hung engine: a wedged round
+    # returns cleanly having done nothing, so the agent keeps
+    # heartbeating forever.  The watchdog instead tracks PROGRESS: an
+    # instance that has work (resident slots or pending VQ entries) but
+    # whose engine counters stay flat past its per-round deadline is
+    # DEGRADED, and past `hang_dead_factor` deadlines is mark_dead like
+    # a crash.  The deadline derives from the calibrated
+    # HardwareProfile: worst-case healthy round = prefill_time +
+    # decode_burst * decode_per_token + swap_time, times
+    # `hang_grace_rounds`.  None disables (sparse-tick callers, e.g.
+    # unit tests driving tick() manually).
+    hang_grace_rounds: Optional[float] = None
+    hang_dead_factor: float = 3.0
 
 
 # Instance health states (supervision state machine — see
-# docs/fault_tolerance.md).  DEAD is terminal: a crashed engine's pool
-# and resident state are gone; recovery means standing up a NEW instance.
+# docs/fault_tolerance.md).  DEAD and DRAINED are terminal for the
+# INSTANCE (a crashed engine's pool is gone; a drained one was
+# decommissioned on purpose) but not for the cluster:
+# replace_instance() attaches a fresh engine in the departed slot.
 HEALTHY = "healthy"
 DEGRADED = "degraded"
+DRAINING = "draining"   # decommissioning: residents finish, pulls stop
+DRAINED = "drained"     # decommissioned cleanly (pool empty, not lost)
 DEAD = "dead"
 
 
@@ -71,6 +89,10 @@ class InstanceHealth:
     missed: int = 0               # consecutive missed heartbeat windows
     died_at: Optional[float] = None
     cause: Optional[str] = None
+    # round-watchdog progress tracking: the engine-counter fingerprint
+    # last seen and when it last moved (None = never sampled)
+    progress_marker: Optional[tuple] = None
+    last_progress: Optional[float] = None
 
 
 class QLMController:
@@ -102,6 +124,11 @@ class QLMController:
         self.health: List[InstanceHealth] = [InstanceHealth()
                                              for _ in self.instances]
         self.redeliveries = 0        # total redelivery events (stats)
+        # lifecycle stats (self-healing cluster: see docs/fault_tolerance.md)
+        self.hangs = 0               # watchdog-detected hangs (mark_dead'd)
+        self.drains = 0              # drain_instance invocations
+        self.replacements = 0        # replace_instance invocations
+        self.migrations = 0          # snapshots made portable cross-engine
         # optional engine handles, index-aligned with instances: lets
         # mark_dead() reclaim a dead engine's resident requests and lets
         # the terminal-state invariant cross-check engine residency
@@ -118,27 +145,52 @@ class QLMController:
         self._engines = list(engines)
 
     def is_alive(self, idx: int) -> bool:
-        return self.health[idx].state != DEAD
+        """Alive = the engine process exists and may hold resident work.
+        DRAINING counts (its residents are finishing); DEAD and DRAINED
+        do not (the instance departed)."""
+        return self.health[idx].state not in (DEAD, DRAINED)
+
+    def is_schedulable(self, idx: int) -> bool:
+        """Schedulable = NEW work may be placed on it.  Stricter than
+        alive: a DRAINING instance finishes its residents but its VQ
+        stays empty — it is departing capacity."""
+        return self.health[idx].state in (HEALTHY, DEGRADED)
 
     def alive_instances(self) -> List[InstanceInfo]:
         return [inst for i, inst in enumerate(self.instances)
                 if self.is_alive(i)]
+
+    def schedulable_instances(self) -> List[InstanceInfo]:
+        return [inst for i, inst in enumerate(self.instances)
+                if self.is_schedulable(i)]
 
     def alive_fraction(self) -> float:
         if not self.instances:
             return 0.0
         return len(self.alive_instances()) / len(self.instances)
 
+    def serving_fraction(self) -> float:
+        """Fraction of attached instances new work can land on (excludes
+        dead, drained, AND draining — the front end scales its admission
+        limits by this, so departing capacity sheds load 503-style
+        instead of stranding it).  0.0 with zero attached instances."""
+        if not self.instances:
+            return 0.0
+        return len(self.schedulable_instances()) / len(self.instances)
+
     def can_serve(self, model: str) -> bool:
-        """Does any ALIVE instance serve ``model``?"""
-        return any(model in i.hw_by_model for i in self.alive_instances())
+        """Does any SCHEDULABLE instance serve ``model``?  (A model whose
+        only server is draining is already unservable for new work.)"""
+        return any(model in i.hw_by_model
+                   for i in self.schedulable_instances())
 
     def heartbeat(self, idx: int, now: float) -> None:
         """A successful agent iteration: reset the strike/missed counters
-        and recover a DEGRADED instance (DEAD stays dead — the pool is
-        gone; recovery means attaching a new instance)."""
+        and recover a DEGRADED instance (DEAD/DRAINED stay departed — the
+        instance is gone; recovery means attaching a new one.  DRAINING
+        stays draining: heartbeats prove liveness, not capacity)."""
         h = self.health[idx]
-        if h.state == DEAD:
+        if not self.is_alive(idx):
             return
         h.last_heartbeat = now
         h.strikes = 0
@@ -154,7 +206,7 @@ class QLMController:
         if timeout is None:
             return
         for idx, h in enumerate(self.health):
-            if h.state == DEAD:
+            if not self.is_alive(idx):
                 continue
             if h.last_heartbeat is None:
                 h.last_heartbeat = now   # start the window at first sight
@@ -167,6 +219,84 @@ class QLMController:
                     and h.state == HEALTHY:
                 h.state = DEGRADED
 
+    # -- round watchdog (hang detection) -------------------------------
+    def round_deadline(self, idx: int) -> Optional[float]:
+        """Worst-case seconds a HEALTHY round on instance ``idx`` may
+        take, derived from its calibrated HardwareProfile(s): one full
+        prefill admission + a fused decode burst + a model swap.  None
+        when the instance carries no profile (nothing to calibrate
+        against)."""
+        hws = list(self.instances[idx].hw_by_model.values())
+        if not hws:
+            return None
+        return max(hw.prefill_time
+                   + hw.decode_per_token * max(1, getattr(hw, "decode_burst",
+                                                          1))
+                   + hw.swap_time for hw in hws)
+
+    @staticmethod
+    def _progress_marker(engine) -> Optional[tuple]:
+        """Monotone fingerprint of engine work: any dispatched round that
+        did something moves at least one component.  ``lengths`` covers
+        mid-prefill chunk progress (no counter bumps until the first
+        token lands)."""
+        stats = getattr(engine, "stats", None)
+        if stats is None:
+            return None
+        marker = tuple(int(getattr(stats, f, 0)) for f in (
+            "tokens_generated", "prefills", "prefill_chunks", "evictions",
+            "resumes", "model_swaps", "cancellations"))
+        lengths = getattr(engine, "lengths", None)
+        if lengths is not None:
+            marker += (int(sum(int(x) for x in lengths)),)
+        return marker
+
+    def _instance_busy(self, idx: int, engine) -> bool:
+        num_active = getattr(engine, "num_active", None)
+        if num_active is not None and num_active() > 0:
+            return True
+        vq = self.instances[idx].virtual_queue
+        return vq.pending_requests() > 0
+
+    def check_watchdog(self, now: float) -> None:
+        """Per-round-deadline hang detection.  Heartbeats only fire on
+        success, and a hung engine's rounds SUCCEED (they just do
+        nothing) — so liveness here is defined as progress: an instance
+        with work whose engine counters stay flat for more than
+        ``hang_grace_rounds`` round deadlines is DEGRADED; past
+        ``hang_dead_factor`` times that it is mark_dead exactly like a
+        crash (abandon + redeliver + re-solve)."""
+        grace = self.cfg.hang_grace_rounds
+        if grace is None or self._engines is None:
+            return
+        for idx, h in enumerate(self.health):
+            if not self.is_alive(idx):
+                continue
+            engine = self._engines[idx]
+            if engine is None:
+                continue
+            marker = self._progress_marker(engine)
+            if marker is None:
+                continue
+            if marker != h.progress_marker or h.last_progress is None \
+                    or not self._instance_busy(idx, engine):
+                h.progress_marker = marker
+                h.last_progress = now
+                continue
+            deadline = self.round_deadline(idx)
+            if deadline is None:
+                continue
+            stalled = now - h.last_progress
+            budget = grace * deadline
+            if stalled > budget * self.cfg.hang_dead_factor:
+                self.hangs += 1
+                self.mark_dead(idx, now, cause=(
+                    f"hang: busy but no progress for {stalled:.3f}s "
+                    f"(> {self.cfg.hang_dead_factor:g} x {budget:.3f}s "
+                    f"round-watchdog budget)"))
+            elif stalled > budget and h.state == HEALTHY:
+                h.state = DEGRADED
+
     def report_engine_failure(self, idx: int, exc: BaseException, now: float,
                               engine=None) -> str:
         """Agent-exception supervision: fatal failures (``EngineCrashed`` /
@@ -175,8 +305,8 @@ class QLMController:
         ``cfg.transient_strikes`` consecutive strikes give up on it.
         Returns the resulting health state."""
         h = self.health[idx]
-        if h.state == DEAD:
-            return DEAD
+        if not self.is_alive(idx):
+            return h.state
         if engine is not None and self._engines is not None:
             self._engines[idx] = engine
         if getattr(exc, "fatal", False):
@@ -217,7 +347,7 @@ class QLMController:
              scheduler re-solves without the dead one.
         """
         h = self.health[idx]
-        if h.state == DEAD:
+        if h.state in (DEAD, DRAINED):
             return
         h.state = DEAD
         h.died_at = now
@@ -259,8 +389,12 @@ class QLMController:
         for g in self.groups:
             if not g.done() and not self._placed(g):
                 self._place_new_group(g, now)
-        if self.alive_instances():
+        if self.schedulable_instances():
             self.reschedule(now)
+            # cross-engine migration: re-placed requests whose eviction
+            # snapshots are pinned in some OTHER alive pool must become
+            # portable, or their new server refuses them forever
+            self.migration_sweep(now)
         self._check_invariants()
 
     def _redeliver(self, r: Request, now: float) -> None:
@@ -274,7 +408,17 @@ class QLMController:
                                      f"{r.redeliveries} deliveries")
             return
         self.redeliveries += 1
-        r.not_before = now + self.backoff(r.redeliveries)
+        not_before = now + self.backoff(r.redeliveries)
+        if r.first_token_time is None and not_before > r.deadline:
+            # the backoff window already overshoots the TTFT deadline:
+            # quarantine as a miss NOW instead of leaving the request
+            # sitting unpullable in the queue until it expires (same
+            # score, immediate terminal state — no zombie queue entries)
+            self._quarantine(r, now, (
+                f"redelivery backoff to t={not_before:.3f} overshoots "
+                f"deadline t={r.deadline:.3f}"))
+            return
+        r.not_before = not_before
         if r.snapshot is None and (r.generated > 0 or r._prefill_done > 0):
             # generation state died with the engine and no snapshot
             # survived: restart cleanly (first_token_time kept — never
@@ -299,6 +443,183 @@ class QLMController:
         if r.completion_time is None:
             r.completion_time = now
         self.failed.append(r)
+
+    # -- graceful drain + replacement (self-healing lifecycle) ----------
+    def drain_instance(self, idx: int, now: float, *, evict: bool = False,
+                       cause: str = "drain") -> None:
+        """Graceful-decommission LSO: stop pulling new work onto instance
+        ``idx``, hand its queued work to the survivors, and let the
+        resident decodes finish (``evict=True`` evicts them instead —
+        snapshots migrate and resume elsewhere).  The instance stays
+        DRAINING (alive, residents finishing, no pulls) until ``tick``
+        observes an empty engine and decommissions it to DRAINED."""
+        h = self.health[idx]
+        if h.state not in (HEALTHY, DEGRADED):
+            return
+        h.state = DRAINING
+        h.cause = cause
+        self.drains += 1
+        inst = self.instances[idx]
+        inst.virtual_queue.groups.clear()
+        engine = self._engines[idx] if self._engines is not None else None
+        if engine is not None:
+            if evict and hasattr(engine, "evict_slot"):
+                for slot in list(engine.active_slots()):
+                    r = engine.evict_slot(slot)
+                    r._in_flight = False
+                    r._served_by = None
+                pushed = engine.take_pushback()
+                if pushed is not None:
+                    pushed._in_flight = False
+                    pushed._served_by = None
+            # departing capacity must not hold anyone's prefix pages:
+            # promote every snapshot pinned in this pool to portable form
+            # now, so the requests resume on OTHER engines (cross-engine
+            # migration) instead of waiting out the drain
+            pinned_here = [r for r in getattr(engine, "_pinned_snapshots",
+                                              ())
+                           if r.snapshot is not None
+                           and r.snapshot.get("pinned")]
+            if pinned_here:
+                engine._materialize_pinned_snapshots()
+                self.migrations += len(pinned_here)
+        # queued work that just lost its last schedulable server is a
+        # recorded miss (residents still finish on the draining engine)
+        for r in list(self.global_queue):
+            if not r.finished() and not getattr(r, "_in_flight", False) \
+                    and not self.can_serve(r.model):
+                self._quarantine(r, now, f"model {r.model} unservable "
+                                         f"while instance {idx} drains")
+        self.gc_groups()
+        for g in self.groups:
+            if g.done() or self._placed(g):
+                continue
+            if self.can_serve(g.model):
+                self._place_new_group(g, now)
+            else:
+                # residents-only remnant (members in flight on the
+                # draining engine): keep it reachable here — nothing in
+                # it is pullable, and _finish_drains reconciles the rest
+                inst.virtual_queue.groups.append(g)
+        if self.schedulable_instances():
+            self.reschedule(now)
+            self.migration_sweep(now)
+        self._check_invariants()
+
+    def _finish_drains(self, now: float) -> None:
+        """Decommission DRAINING instances whose engines emptied out:
+        state -> DRAINED, VQ cleared, any member a late pushback left
+        queued here re-placed (or quarantined if its model lost its last
+        server)."""
+        for idx, h in enumerate(self.health):
+            if h.state != DRAINING:
+                continue
+            engine = self._engines[idx] if self._engines is not None \
+                else None
+            if engine is not None:
+                if getattr(engine, "num_active", lambda: 0)() > 0:
+                    continue
+                if getattr(engine, "_pushback", None) is not None:
+                    continue
+            h.state = DRAINED
+            h.died_at = now
+            self.instances[idx].virtual_queue.groups.clear()
+            self.gc_groups()
+            for g in self.groups:
+                if g.done() or self._placed(g):
+                    continue
+                if self.can_serve(g.model):
+                    self._place_new_group(g, now)
+                else:
+                    for r in g.requests:
+                        if not r.finished():
+                            self._quarantine(r, now, (
+                                f"model {r.model} unservable after "
+                                f"instance {idx} drained"))
+            self._check_invariants()
+
+    def replace_instance(self, idx: int, engine, now: float,
+                         hw_by_model=None, model_name=None) -> None:
+        """Attach a fresh engine in a departed slot: DEAD/DRAINED stops
+        being terminal for the CLUSTER, only for the instance that died.
+        The virtual queue is reused (it holds pointers, and it was
+        emptied when the predecessor departed), health resets to
+        HEALTHY, and a re-solve spreads queued + redelivered work onto
+        the recovered capacity."""
+        h = self.health[idx]
+        if h.state not in (DEAD, DRAINED):
+            raise ValueError(
+                f"instance {idx} is {h.state}: only departed "
+                f"(dead/drained) instances can be replaced")
+        inst = self.instances[idx]
+        inst.virtual_queue.groups.clear()
+        if hw_by_model is not None:
+            inst.hw_by_model = dict(hw_by_model)
+        inst.current_model = model_name if model_name is not None \
+            else getattr(engine, "model_name", inst.current_model)
+        if self._engines is None:
+            self._engines = [None] * len(self.instances)
+        self._engines[idx] = engine
+        self.health[idx] = InstanceHealth(last_heartbeat=now)
+        self.replacements += 1
+        self.reschedule(now)
+        self.migration_sweep(now)
+        self._check_invariants()
+
+    # -- cross-engine snapshot migration --------------------------------
+    def _pool_owner(self, pool) -> Optional[int]:
+        """Index of the ALIVE attached engine whose current pool is
+        ``pool`` (None: the pool died, was swapped out, or is foreign)."""
+        if pool is None or self._engines is None:
+            return None
+        for idx, eng in enumerate(self._engines):
+            if eng is not None and self.is_alive(idx) \
+                    and getattr(eng, "block_mgr", None) is pool:
+                return idx
+        return None
+
+    def migration_sweep(self, now: float) -> int:
+        """Make stranded-by-pinning snapshots portable (the recovery half
+        of the eviction LSO).  A request whose snapshot pins shared-
+        prefix pages in pool A can only resume on A's engine; when the
+        scheduler placed it elsewhere (death, drain, or rebalance), ask
+        the OWNING engine to materialize the snapshot — pinned page
+        contents copied into it, pins released — after which any alive
+        engine of the same KV layout resumes it token-identically.
+        Pins whose owner departed or reset its pool are released (the
+        pages are gone) and the request restarts from its prompt.
+        Returns the number of snapshots migrated."""
+        if self._engines is None:
+            return 0
+        placed = {}
+        for idx, inst in enumerate(self.instances):
+            for g in inst.virtual_queue.groups:
+                placed[g.group_id] = idx
+        migrated = 0
+        for r in self.global_queue:
+            if r.finished() or getattr(r, "_in_flight", False):
+                continue
+            snap = r.snapshot
+            if not isinstance(snap, dict) or not snap.get("pinned"):
+                continue
+            pool = snap.get("pin_owner")
+            owner = self._pool_owner(pool)
+            if owner is None \
+                    or snap.get("pin_epoch") != getattr(pool, "epoch", None):
+                # the pinned pages no longer exist: release (stale-epoch
+                # release is a no-op) and recompute from the prompt
+                pool.release_pins(snap["pinned"], snap.get("pin_epoch"))
+                r.restart()
+                continue
+            home = placed.get(r.group_id)
+            if home == owner and self.is_schedulable(owner):
+                continue   # its own engine will resume it: pins transfer
+            engine = self._engines[owner]
+            if hasattr(engine, "materialize_snapshot") \
+                    and engine.materialize_snapshot(r):
+                migrated += 1
+                self.migrations += 1
+        return migrated
 
     @property
     def max_group(self) -> int:
@@ -334,7 +655,8 @@ class QLMController:
             self._place_new_group(g, now)
         if self.cfg.reschedule_on_arrival and \
                 now - self._last_reschedule >= self.cfg.reschedule_cooldown and \
-                self.scheduler.predict_violation(self.alive_instances(), now):
+                self.scheduler.predict_violation(self.schedulable_instances(),
+                                                 now):
             self.reschedule(now)
         return True
 
@@ -367,12 +689,12 @@ class QLMController:
         heterogeneity-aware (Design Principle #3: an A10 absorbs
         proportionally less work than an A100), unlike a raw request count.
         """
-        candidates = [i for i in self.alive_instances()
+        candidates = [i for i in self.schedulable_instances()
                       if g.model in i.hw_by_model]
         if not candidates:
-            # submit() rejects unservable models and mark_dead()
-            # quarantines orphans before re-placing, so this is a
-            # controller bug, not load
+            # submit() rejects unservable models and mark_dead() /
+            # drain_instance() quarantine orphans before re-placing, so
+            # this is a controller bug, not load
             raise ValueError(f"no alive instance can serve model {g.model}")
         wl = g.workload_profile()
 
@@ -388,12 +710,14 @@ class QLMController:
 
     # ------------------------------------------------------------------
     def reschedule(self, now: float):
-        """Re-solve over the ALIVE instances only: dead VQs were emptied
-        at mark_dead() and must stay empty."""
+        """Re-solve over the SCHEDULABLE instances only: dead/drained VQs
+        were emptied when the instance departed and must stay empty, and
+        a draining instance is departing capacity the solver must not
+        count on."""
         self.gc_groups()
         self._last_reschedule = now
-        return self.scheduler.schedule(self.groups, self.alive_instances(),
-                                       now)
+        return self.scheduler.schedule(self.groups,
+                                       self.schedulable_instances(), now)
 
     def tick(self, now: float) -> bool:
         """Periodic violation check (returns True if it rescheduled).
@@ -404,12 +728,16 @@ class QLMController:
         group heads, firing the agents' head-change eviction LSO) without
         any new information to act on.
         """
+        self.check_watchdog(now)
         self.check_heartbeats(now)
+        self._finish_drains(now)
+        self.migration_sweep(now)
         if now - self._last_reschedule < self.cfg.reschedule_cooldown:
             self._check_invariants()
             return False
         rescheduled = False
-        if self.scheduler.predict_violation(self.alive_instances(), now):
+        if self.scheduler.predict_violation(self.schedulable_instances(),
+                                            now):
             self.reschedule(now)
             rescheduled = True
         self._check_invariants()
@@ -428,11 +756,14 @@ class QLMController:
             from repro.analysis.invariants import InvariantSampler
             self._inv_sampler = InvariantSampler()
         if self._inv_sampler.due():
-            from repro.analysis.invariants import (check_queue_layer,
+            from repro.analysis.invariants import (check_migration,
+                                                   check_queue_layer,
                                                    check_terminal_states)
             check_queue_layer(self, where="controller.tick")
             check_terminal_states(self, engines=self._engines,
                                   where="controller.tick")
+            check_migration(self, engines=self._engines,
+                            where="controller.tick")
 
     def gc_groups(self) -> None:
         self.groups = [g for g in self.groups if not g.done()]

@@ -15,6 +15,28 @@ contract:
   * the same seed replays the identical fault timeline
     (``--replay-check`` runs the soak twice and compares).
 
+``--scenario`` selects the lifecycle under test:
+
+  * ``kill`` (default) — hard mid-decode crash, the PR-7 contract above;
+  * ``hang`` — the engine stalls silently (rounds "succeed" with zero
+    progress, heartbeats keep flowing): the controller's round watchdog
+    must detect it, with NO exception ever surfacing;
+  * ``drain`` — graceful decommission: residents finish, the instance
+    reaches DRAINED, zero evictions needed;
+  * ``kill-replace`` — crash + ``ReplacementPolicy`` autoscaling: a
+    fresh engine takes the dead slot and serves redelivered work;
+  * ``migrate`` — forced drain-with-evict creates live-pinned KV
+    snapshots that must resume token-identical on ANOTHER engine
+    (cross-engine snapshot migration);
+  * ``combined`` — hang one engine + crash another + replacement +
+    ≥1 migration, outputs byte-identical to a no-fault baseline
+    (the ISSUE-9 acceptance scenario; run with ``--instances 3``);
+  * ``none`` — fault-free baseline (used for output-identity checks).
+
+``--plan-file`` overrides the scenario's fault schedule with a JSON
+``FaultPlan`` (``FaultPlan.from_json``) for replaying captured
+timelines.
+
 ``--no-supervision`` runs the same fault schedule with the recovery
 machinery disabled (failures swallowed, no redelivery): requests strand,
 proving the harness detects exactly what the supervision layer fixes.
@@ -34,9 +56,11 @@ from typing import List, Optional
 
 import numpy as np
 
-from repro.analysis.invariants import (check_block_manager, check_queue_layer,
+from repro.analysis.invariants import (check_block_manager, check_migration,
+                                       check_queue_layer,
                                        check_terminal_states)
 from repro.configs import get_arch
+from repro.core.autoscale import ReplacementPolicy
 from repro.core.global_scheduler import InstanceInfo
 from repro.core.lso import QLMAgent
 from repro.core.qlm import QLMConfig, QLMController
@@ -73,8 +97,21 @@ def _hw(max_new: int) -> HardwareProfile:
 
 
 def default_plan(args) -> FaultPlan:
-    specs = [FaultSpec(site=args.site, kind="crash", engine=args.kill_engine,
-                       at_count=args.kill_at)]
+    scenario = getattr(args, "scenario", "kill")
+    plan_file = getattr(args, "plan_file", None)
+    if plan_file:
+        with open(plan_file) as f:
+            return FaultPlan.from_json(f.read())
+    specs = []
+    if scenario in ("kill", "kill-replace", "combined"):
+        specs.append(FaultSpec(site=args.site, kind="crash",
+                               engine=args.kill_engine, at_count=args.kill_at))
+    if scenario in ("hang", "combined"):
+        # hang fires on the round site so it stalls the engine even while
+        # it is only pulling work (no decode occurrences needed)
+        specs.append(FaultSpec(site="round", kind="hang",
+                               engine=getattr(args, "hang_engine", 0),
+                               at_count=getattr(args, "hang_at", 6)))
     if args.error_prob > 0:
         # probabilistic transient errors on the surviving engine exercise
         # the strike/heartbeat-recovery path alongside the hard kill
@@ -92,32 +129,51 @@ def build_cluster(args, plan: FaultPlan):
     clock = VirtualClock()
     ecfg = EngineConfig(max_slots=args.slots, max_seq_len=128, block_size=8,
                         attention_backend="paged-xla", prefix_sharing=True)
-    engines, agents, infos = [], [], []
-    for i in range(args.instances):
+
+    def make_engine(engine_id: int) -> FaultyEngine:
+        # replacement engines get FRESH unique ids so the plan's
+        # occurrence counters never re-fire on the new hardware
         inner = ContinuousBatchingEngine(model, params, ecfg,
                                          model_name=args.arch, clock=clock)
-        eng = FaultyEngine(inner, plan, engine_id=i)
+        return FaultyEngine(inner, plan, engine_id=engine_id)
+
+    engines, agents, infos = [], [], []
+    for i in range(args.instances):
+        eng = make_engine(i)
         vq = VirtualQueue(i)
         agents.append(QLMAgent(eng, vq, registry))
         engines.append(eng)
         infos.append(InstanceInfo(i, {args.arch: _hw(args.max_new_tokens)},
                                   args.arch, vq))
+    scenario = getattr(args, "scenario", "kill")
+    grace = getattr(args, "hang_grace", None)
+    if grace is None and scenario in ("hang", "combined"):
+        grace = 3.0
     controller = QLMController(infos, QLMConfig(
         avg_batch_size=args.slots, reschedule_cooldown=0.5,
         retry_budget=args.retry_budget, backoff_base_s=0.05,
-        backoff_cap_s=1.0))
+        backoff_cap_s=1.0, hang_grace_rounds=grace))
     controller.attach_engines(engines)
-    return clock, engines, agents, controller
+    return clock, engines, agents, controller, make_engine, registry
 
 
 def build_requests(args) -> List:
     rng = np.random.default_rng(args.seed)
     classes = ["interactive", "interactive", "batch1"]
     arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
+    # migration scenarios prepend a shared system-prompt-style prefix:
+    # prefix sharing turns it into pinned pages, and pinned pages are what
+    # eviction leaves behind / migration must materialize away
+    shared = getattr(args, "shared_prefix", None)
+    if shared is None:
+        shared = 8 if getattr(args, "scenario", "kill") in ("migrate",
+                                                            "combined") else 0
+    prefix = list(range(1, int(shared) + 1))
     reqs = []
     for i in range(args.requests):
-        prompt = rng.integers(0, 100, size=int(rng.integers(6, 20))).tolist()
-        reqs.append(make_request(prompt, args.arch, classes[i % len(classes)],
+        tail = rng.integers(0, 100, size=int(rng.integers(6, 20))).tolist()
+        reqs.append(make_request(prefix + tail, args.arch,
+                                 classes[i % len(classes)],
                                  arrival_time=float(arrivals[i]),
                                  max_new_tokens=args.max_new_tokens))
     return reqs
@@ -131,9 +187,33 @@ def run_soak(args, plan: Optional[FaultPlan] = None) -> dict:
     """One seeded soak run.  Returns the stats dict (pure data — the
     CLI's assertions live in main() so tests can call this directly)."""
     plan = default_plan(args) if plan is None else plan
-    clock, engines, agents, controller = build_cluster(args, plan)
+    scenario = getattr(args, "scenario", "kill")
+    clock, engines, agents, controller, make_engine, registry = \
+        build_cluster(args, plan)
     reqs = build_requests(args)
     pending = list(reqs)
+
+    policy = None
+    if scenario in ("kill-replace", "combined"):
+        policy = ReplacementPolicy(
+            cooldown_s=getattr(args, "replace_cooldown", 0.5))
+    drain_engine = getattr(args, "drain_engine", None)
+    if drain_engine is None:
+        # combined drains the engine that neither hangs nor crashes
+        drain_engine = args.instances - 1 if scenario == "combined" else 0
+    drain_round = getattr(args, "drain_at_round", None)
+    if drain_round is None:
+        # migration scenarios drain while sharers are still co-resident
+        # (pins only exist while ≥2 sequences reference the prefix pages)
+        drain_round = {"migrate": 16, "combined": 8}.get(scenario, 40)
+    # migration scenarios evict on drain so live-pinned snapshots exist
+    # and MUST move; plain drain is graceful (zero evictions)
+    drain_evict = bool(getattr(args, "drain_evict", False)) \
+        or scenario in ("migrate", "combined")
+    drains_scenario = scenario in ("drain", "migrate", "combined")
+    drained_fired = False
+    retired: List[tuple] = []
+    next_engine_id = args.instances
 
     supervision = not args.no_supervision
     rounds = failures = 0
@@ -142,7 +222,27 @@ def run_soak(args, plan: Optional[FaultPlan] = None) -> dict:
         now = clock.advance(args.round_dt)
         while pending and pending[0].arrival_time <= now:
             controller.submit(pending.pop(0), now)
+        if (drains_scenario and not drained_fired and rounds >= drain_round
+                and controller.is_schedulable(drain_engine)):
+            # an evicting drain only migrates anything if the instance is
+            # busy when it lands, so wait for ≥2 co-resident sharers
+            # (bounded: past 4x the trigger round, drain regardless)
+            busy = getattr(engines[drain_engine], "num_active", lambda: 0)()
+            if not drain_evict or busy >= 2 or rounds >= 4 * drain_round:
+                controller.drain_instance(drain_engine, now,
+                                          evict=drain_evict,
+                                          cause=f"chaos scenario={scenario}")
+                drained_fired = True
         controller.tick(now)
+        if policy is not None and supervision:
+            for idx in policy.replacements_due(controller, now):
+                eng = make_engine(next_engine_id)
+                next_engine_id += 1
+                retired.append((idx, engines[idx]))
+                controller.replace_instance(idx, eng, now)
+                engines[idx] = eng
+                agents[idx] = QLMAgent(
+                    eng, controller.instances[idx].virtual_queue, registry)
         for idx, agent in enumerate(agents):
             if not controller.is_alive(idx):
                 continue
@@ -159,7 +259,8 @@ def run_soak(args, plan: Optional[FaultPlan] = None) -> dict:
             else:
                 if supervision:
                     controller.heartbeat(idx, now)
-        if not pending and all(_terminal(r) for r in reqs):
+        if not pending and all(_terminal(r) for r in reqs) \
+                and not any(h.state == "draining" for h in controller.health):
             break
 
     now = clock()
@@ -175,9 +276,18 @@ def run_soak(args, plan: Optional[FaultPlan] = None) -> dict:
                       if controller.is_alive(idx) or supervision)
         leaked.extend(f"engine{idx}:pin{b}" for b, p in bm._pins.items()
                       if p > 0)
+    for j, (idx, eng) in enumerate(retired):
+        # replaced (dead/drained) engines: salvage + migration must have
+        # emptied the pool — retired capacity may hold nobody's state
+        bm = eng.block_mgr
+        check_block_manager(bm, where=f"chaos/retired{j}(was engine{idx})")
+        leaked.extend(f"retired{j}:seq{sid}" for sid in bm._seqs)
+        leaked.extend(f"retired{j}:pin{b}" for b, p in bm._pins.items()
+                      if p > 0)
     if supervision:
         check_queue_layer(controller, where="chaos/end")
         check_terminal_states(controller, engines=engines, where="chaos/end")
+        check_migration(controller, engines=engines, where="chaos/end")
 
     stranded = [r for r in reqs if not _terminal(r)]
     interactive = [r for r in reqs if r.slo_class == "interactive"]
@@ -185,6 +295,7 @@ def run_soak(args, plan: Optional[FaultPlan] = None) -> dict:
                      if not r.failed and r.slo_met() is True)
     stats = {
         "seed": args.seed,
+        "scenario": scenario,
         "supervision": supervision,
         "rounds": rounds,
         "requests": len(reqs),
@@ -195,6 +306,10 @@ def run_soak(args, plan: Optional[FaultPlan] = None) -> dict:
         "stranded": len(stranded),
         "redeliveries": controller.redeliveries,
         "engine_failures": failures,
+        "hangs": getattr(controller, "hangs", 0),
+        "drains": getattr(controller, "drains", 0),
+        "replacements": getattr(controller, "replacements", 0),
+        "migrations": getattr(controller, "migrations", 0),
         "dead_instances": [i for i in range(len(engines))
                            if not controller.is_alive(i)],
         "health": [h.state for h in controller.health],
@@ -203,6 +318,11 @@ def run_soak(args, plan: Optional[FaultPlan] = None) -> dict:
         "interactive_attainment": (inter_hits / len(interactive)
                                    if interactive else 1.0),
         "timeline": plan.timeline(),
+        # keyed by build-order index (req_id is a process-global counter,
+        # so it differs across runs in one process); used for the
+        # token-identity check against the no-fault baseline
+        "outputs": {str(i): list(r.output_tokens) for i, r in enumerate(reqs)
+                    if r.finished() and not r.failed and not r.rejected},
     }
     return stats
 
@@ -216,6 +336,14 @@ def main(argv=None) -> int:
     ap.add_argument("--max-new-tokens", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scenario", default="kill",
+                    choices=["kill", "hang", "drain", "kill-replace",
+                             "migrate", "combined", "none"],
+                    help="lifecycle under test (see module docstring); "
+                         "combined wants --instances 3")
+    ap.add_argument("--plan-file", dest="plan_file", default=None,
+                    help="JSON FaultPlan overriding the scenario's fault "
+                         "schedule (FaultPlan.from_json)")
     ap.add_argument("--site", default="decode",
                     choices=["decode", "prefill", "swap", "materialize",
                              "round"])
@@ -226,6 +354,29 @@ def main(argv=None) -> int:
                          "time: that is what makes the timeline seeded)")
     ap.add_argument("--error-prob", type=float, default=0.0,
                     help="per-round transient-error probability (strikes)")
+    ap.add_argument("--hang-engine", type=int, default=0,
+                    help="engine stalled by the hang/combined scenarios")
+    ap.add_argument("--hang-at", type=int, default=6,
+                    help="hang at the Nth round occurrence on --hang-engine")
+    ap.add_argument("--hang-grace", type=float, default=None,
+                    help="watchdog grace in calibrated round deadlines "
+                         "(default: 3.0 for hang scenarios, else off)")
+    ap.add_argument("--drain-engine", type=int, default=None,
+                    help="instance drained by drain/migrate/combined "
+                         "(default: 0, or the last instance for combined)")
+    ap.add_argument("--drain-at-round", type=int, default=None,
+                    help="round at which the drain LSO fires (default 40, "
+                         "or 16 for migrate/combined so sharers are still "
+                         "co-resident when the evict lands)")
+    ap.add_argument("--drain-evict", action="store_true",
+                    help="drain with forced eviction (migrate/combined "
+                         "imply this: it is what creates migratable pins)")
+    ap.add_argument("--replace-cooldown", type=float, default=0.5,
+                    help="ReplacementPolicy decision cooldown, virtual s")
+    ap.add_argument("--shared-prefix", type=int, default=None,
+                    help="shared leading prompt tokens (default: 8 for "
+                         "migrate/combined — sharing is what creates "
+                         "migratable pins — else 0)")
     ap.add_argument("--retry-budget", type=int, default=2)
     ap.add_argument("--round-dt", type=float, default=0.05,
                     help="virtual seconds per round")
@@ -244,6 +395,7 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     stats = run_soak(args)
+    scenario = args.scenario
     failures: List[str] = []
     if args.no_supervision:
         if stats["stranded"] == 0:
@@ -256,19 +408,61 @@ def main(argv=None) -> int:
                             f"non-terminal")
         if stats["leaked_blocks"]:
             failures.append(f"leaked KV accounting: {stats['leaked_blocks']}")
-        if not stats["dead_instances"]:
+        if scenario == "kill" and not stats["dead_instances"]:
             failures.append("fault plan killed no engine (kill-at never "
                             "reached: raise --requests or lower --kill-at)")
+        if scenario in ("kill-replace", "combined"):
+            if stats["engine_failures"] < 1:
+                failures.append("crash never fired (kill-at never reached)")
+            if stats["replacements"] < 1:
+                failures.append("ReplacementPolicy never replaced the dead "
+                                "capacity")
+        if scenario in ("hang", "combined") and stats["hangs"] < 1:
+            failures.append("round watchdog never detected the hang "
+                            "(no-exception stall went unnoticed)")
+        if scenario in ("drain", "migrate", "combined") \
+                and stats["drains"] < 1:
+            failures.append("drain LSO never fired")
+        if scenario in ("drain", "migrate") \
+                and "drained" not in stats["health"]:
+            failures.append(f"drain never completed: health "
+                            f"{stats['health']}")
+        if scenario in ("migrate", "combined") and stats["migrations"] < 1:
+            failures.append("no snapshot migrated cross-engine (drain-evict "
+                            "produced no live pins?)")
         if stats["interactive_attainment"] < args.attainment_floor:
             failures.append(
                 f"interactive attainment {stats['interactive_attainment']:.3f}"
                 f" below floor {args.attainment_floor}")
+        if scenario in ("migrate", "combined"):
+            # migrated (and every other served) request must be
+            # token-identical to the same-seed run with no faults at all
+            base_args = argparse.Namespace(**vars(args))
+            if base_args.shared_prefix is None:
+                base_args.shared_prefix = 8   # the migrate-scenario default
+            base_args.scenario, base_args.plan_file = "none", None
+            base = run_soak(base_args, plan=FaultPlan([], seed=args.seed))
+            common = set(stats["outputs"]) & set(base["outputs"])
+            if not common:
+                failures.append("no served request overlaps the no-fault "
+                                "baseline (nothing to token-compare)")
+            diverged = sorted(int(i) for i in common
+                              if stats["outputs"][i] != base["outputs"][i])
+            if diverged:
+                failures.append(f"outputs diverged from the no-fault "
+                                f"baseline for request(s) {diverged}: "
+                                f"migration is not token-preserving")
+            else:
+                stats["outputs_match_baseline"] = len(common)
         if args.replay_check:
             replay = run_soak(args)
             if replay["timeline"] != stats["timeline"]:
                 failures.append(
                     f"replay diverged: {stats['timeline']} vs "
                     f"{replay['timeline']}")
+            elif replay["outputs"] != stats["outputs"]:
+                failures.append("replay produced different tokens from "
+                                "the same seed")
             else:
                 stats["replay_identical"] = True
 
@@ -280,7 +474,7 @@ def main(argv=None) -> int:
             json.dump({"seed": args.seed, "events": stats["timeline"]}, f,
                       indent=2)
     for k, v in stats.items():
-        if k != "timeline":
+        if k not in ("timeline", "outputs"):
             print(f"{k:24s} {v:.3f}" if isinstance(v, float)
                   else f"{k:24s} {v}")
     for msg in failures:

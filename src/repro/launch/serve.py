@@ -81,6 +81,10 @@ def summarize(reqs, controller, engines, t_start: float, now: float) -> dict:
         # getattr: summarize also accepts stub controllers without the
         # supervision layer (qlint regression tests, older drivers)
         "redeliveries": getattr(controller, "redeliveries", 0),
+        "hangs": getattr(controller, "hangs", 0),
+        "drains": getattr(controller, "drains", 0),
+        "replacements": getattr(controller, "replacements", 0),
+        "migrations": getattr(controller, "migrations", 0),
         "dead_instances": sum(1 for i in range(len(controller.instances))
                               if not controller.is_alive(i))
         if hasattr(controller, "is_alive") else 0,

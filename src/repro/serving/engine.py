@@ -236,6 +236,9 @@ class EngineStats:
     # async front-end hooks (frontend cancellation / overload shedding)
     cancellations: int = 0         # cancel_request frees (slot or snapshot)
     sheds: int = 0                 # shed_slots evict/drop actions
+    # cross-engine snapshot migration (self-healing cluster lifecycle)
+    migrations_out: int = 0        # snapshots made portable on request
+    migrations_in: int = 0         # foreign snapshots resumed here
 
 
 class ContinuousBatchingEngine:
@@ -709,17 +712,22 @@ class ContinuousBatchingEngine:
                     f"KV snapshot on a {my_layout} engine mid-decode")
         if req.snapshot is not None \
                 and self._usable_pins(req.snapshot) is None:
-            # the snapshot's shared-prefix blocks are pinned in ANOTHER
-            # engine's pool (or an epoch that has been reset): only the
-            # private pages travelled with the snapshot, so the prefix KV
-            # is unreachable here.  Recompute when nothing was generated
-            # yet (the discard releases the foreign pins).
+            # the snapshot's shared-prefix blocks are STILL pinned in
+            # another engine's pool (or an epoch that has been reset):
+            # only the private pages travelled with the snapshot, so the
+            # prefix KV is unreachable here.  The migration path
+            # (materialize_snapshot on the owner, driven by
+            # QLMController.migration_sweep) makes such snapshots
+            # portable BEFORE they reach a foreign engine; recompute when
+            # nothing was generated yet (the discard releases the
+            # foreign pins).
             if req.generated == 0:
                 self._discard_snapshot(req)
             else:
                 raise ValueError(
-                    "cannot resume a prefix-shared KV snapshot outside the "
-                    "engine that evicted it mid-decode")
+                    "cannot resume a live-pinned KV snapshot outside the "
+                    "engine that evicted it mid-decode (materialize it "
+                    "first: cross-engine migration)")
         if req.snapshot is not None \
                 and req.snapshot.get("prefill_pos", req.prompt_len) < req.prompt_len \
                 and not self._use_chunked(ex):
@@ -759,6 +767,11 @@ class ContinuousBatchingEngine:
                 self._restore_cache(snap["cache"], slot)
             self.lengths[slot] = length
             self.prefill_pos[slot] = ppos
+            if snap.get("pin_owner") is not None \
+                    and snap.get("pin_owner") is not self.block_mgr:
+                # the snapshot was taken in ANOTHER engine's pool and
+                # arrived portable (materialized): a completed migration
+                self.stats.migrations_in += 1
             req.snapshot = None  # pins were transferred, not released
             self.stats.resumes += 1
             self.slots[slot] = req
@@ -983,28 +996,52 @@ class ContinuousBatchingEngine:
             out.append(pushed)
         return out
 
+    def _materialize_one(self, req: Request) -> bool:
+        """Promote one still-live pinned snapshot to a self-contained one:
+        copy the pinned pages' CONTENTS into the snapshot (prepended
+        before the private tail) and release the pins.  After this the
+        snapshot is PORTABLE: any engine with the same KV layout resumes
+        it token-identically (the cross-engine migration primitive).
+        Returns False when there is nothing to save (snapshot resumed /
+        discarded / pinned elsewhere / stale epoch)."""
+        snap = req.snapshot
+        if not snap or not snap.get("pinned") \
+                or snap.get("pin_owner") is not self.block_mgr \
+                or snap.get("pin_epoch") != self.block_mgr.epoch:
+            return False
+        pinned = snap["pinned"]
+        shared_pages = self._extract_pages(pinned)
+        snap["cache"] = jax.tree.map(
+            lambda shared, private: np.concatenate([shared, private],
+                                                   axis=1),
+            shared_pages, snap["cache"])
+        self.block_mgr.release_pins(pinned, snap["pin_epoch"])
+        snap["pinned"] = []
+        return True
+
+    def materialize_snapshot(self, req: Request) -> bool:
+        """Cross-engine migration hook (``QLMController.migration_sweep``
+        / ``drain_instance``): make ``req``'s eviction snapshot portable
+        so a DIFFERENT engine can resume it.  Single-request form of
+        ``_materialize_pinned_snapshots``; the request drops out of this
+        engine's pinned-snapshot ledger once its pins are gone."""
+        out = self._materialize_one(req)
+        if out:
+            self.stats.migrations_out += 1
+            self._pinned_snapshots = [
+                r for r in self._pinned_snapshots
+                if r.snapshot is not None and r.snapshot.get("pinned")]
+        return out
+
     def _materialize_pinned_snapshots(self) -> None:
-        """Promote every still-live pinned snapshot to a self-contained one:
-        copy the pinned pages' CONTENTS into the snapshot (prepended before
-        the private tail) and release the pins.  Must run while the pool
-        buffers are still alive — called before a pool reset (model swap)
-        would kill the pins, so a request evicted with a shared prefix
-        stays resumable after the engine swaps back to its model (the
+        """Promote every still-live pinned snapshot to a self-contained one
+        (see ``_materialize_one``).  Must run while the pool buffers are
+        still alive — called before a pool reset (model swap) would kill
+        the pins, so a request evicted with a shared prefix stays
+        resumable after the engine swaps back to its model (the
         pre-sharing behavior)."""
         for req in self._pinned_snapshots:
-            snap = req.snapshot
-            if not snap or not snap.get("pinned") \
-                    or snap.get("pin_owner") is not self.block_mgr \
-                    or snap.get("pin_epoch") != self.block_mgr.epoch:
-                continue  # resumed / discarded / stale — nothing to save
-            pinned = snap["pinned"]
-            shared_pages = self._extract_pages(pinned)
-            snap["cache"] = jax.tree.map(
-                lambda shared, private: np.concatenate([shared, private],
-                                                       axis=1),
-                shared_pages, snap["cache"])
-            self.block_mgr.release_pins(pinned, snap["pin_epoch"])
-            snap["pinned"] = []
+            self._materialize_one(req)
         self._pinned_snapshots = []
 
     # ------------------------------------------------------------------

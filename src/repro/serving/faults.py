@@ -28,7 +28,12 @@ Fault kinds: ``crash`` marks the engine dead and raises
 ``EngineCrashed`` — every later call raises ``EngineDead`` (a crashed
 host does not come back); ``error`` raises ``TransientEngineError``
 without killing the engine (the supervision layer's strike counter
-decides); ``delay`` sleeps ``delay_s`` (degraded, not failed).
+decides); ``delay`` sleeps ``delay_s`` (degraded, not failed); ``hang``
+wedges the engine WITHOUT raising — every later round consumes its
+quantum and makes zero progress (no tokens, no completions, no
+exception), which is invisible to success-only heartbeats and exactly
+what the controller's round watchdog
+(``QLMConfig.hang_grace_rounds``) exists to catch.
 
 The supervision consumer is ``QLMController.report_engine_failure`` +
 ``mark_dead`` (``core/qlm.py``); the chaos driver is
@@ -43,7 +48,7 @@ import time
 from typing import Any, Dict, List, Optional, Tuple
 
 FAULT_SITES = ("decode", "prefill", "swap", "materialize", "round")
-FAULT_KINDS = ("crash", "error", "delay")
+FAULT_KINDS = ("crash", "error", "delay", "hang")
 
 
 class EngineFailure(RuntimeError):
@@ -151,11 +156,24 @@ class FaultPlan:
             "events": self.events,
         }, indent=2)
 
+    @classmethod
+    def from_json(cls, text: str) -> "FaultPlan":
+        """Rebuild a FRESH plan (counters zeroed) from a ``to_json``
+        artifact, so a CI chaos timeline replays locally verbatim.  The
+        recorded ``events`` are intentionally dropped: determinism means
+        re-running the specs from the seed regenerates them."""
+        data = json.loads(text)
+        spec_fields = {f.name for f in dataclasses.fields(FaultSpec)}
+        specs = [FaultSpec(**{k: v for k, v in s.items() if k in spec_fields})
+                 for s in data.get("specs", [])]
+        return cls(specs, seed=int(data.get("seed", 0)))
+
 
 # Fields the wrapper keeps for itself; everything else delegates to the
 # wrapped engine (both get and set — the agent assigns
 # ``engine.pull_source`` through the wrapper).
-_OWN_FIELDS = ("_engine", "_plan", "engine_id", "dead", "_inner_materialize")
+_OWN_FIELDS = ("_engine", "_plan", "engine_id", "dead", "hung",
+               "_inner_materialize")
 
 
 class FaultyEngine:
@@ -172,6 +190,7 @@ class FaultyEngine:
         object.__setattr__(self, "_plan", plan)
         object.__setattr__(self, "engine_id", engine_id)
         object.__setattr__(self, "dead", False)
+        object.__setattr__(self, "hung", False)
         # the materialize site lives INSIDE engine paths (swap_model, the
         # admit pool-pressure valve), so it is hooked on the instance
         object.__setattr__(self, "_inner_materialize",
@@ -194,6 +213,12 @@ class FaultyEngine:
         if spec.kind == "delay":
             time.sleep(spec.delay_s)
             return
+        if spec.kind == "hang":
+            # the wedge: no exception, no progress — rounds from here on
+            # consume their quantum and return nothing, so success-only
+            # heartbeats keep firing while the engine strands its work
+            self.hung = True
+            return
         if spec.kind == "crash":
             self.dead = True
             raise EngineCrashed(
@@ -208,15 +233,23 @@ class FaultyEngine:
         if spec is not None:
             self._apply(spec, site)
 
-    def _pre_round(self) -> None:
+    def _pre_round(self) -> bool:
+        """Fault-site gate at a round boundary.  Returns True when the
+        round must stall (hung engine): the caller returns an empty
+        round instead of dispatching.  Once hung, occurrence counters
+        freeze too — a wedged engine stops reaching its fault sites,
+        which keeps the timeline replayable."""
         if self.dead:
             raise EngineDead(f"engine {self.engine_id} is dead")
+        if self.hung:
+            return True
         self._check("round")
         eng = self._engine
         if eng.prefilling_slots():
             self._check("prefill")
         elif eng.decode_slots():
             self._check("decode")
+        return self.hung
 
     def _materialize_hook(self) -> None:
         if self.dead:
@@ -226,16 +259,20 @@ class FaultyEngine:
 
     # -- interposed engine surface ----------------------------------------
     def step(self):
-        self._pre_round()
+        if self._pre_round():
+            return []
         return self._engine.step()
 
     def steps(self, k: Optional[int] = None):
-        self._pre_round()
+        if self._pre_round():
+            return []
         return self._engine.steps(k)
 
     def swap_model(self, model, params, model_name: str):
         if self.dead:
             raise EngineDead(f"engine {self.engine_id} is dead")
+        if self.hung:
+            return []   # a wedged engine executes nothing, swaps included
         self._check("swap")
         return self._engine.swap_model(model, params, model_name)
 

@@ -287,14 +287,21 @@ class AsyncServer:
         return req.slo <= self.cfg.interactive_slo_ceiling
 
     def _scaled_limits(self) -> Tuple[int, int, int]:
-        """(hard cap, high, low) scaled by the alive-capacity fraction:
-        when engines die, the queue the survivors can drain in the same
-        time shrinks proportionally, so the watermarks tighten and excess
-        arrivals shed 503-style instead of stranding past their SLOs."""
+        """(hard cap, high, low) scaled by the serving-capacity fraction:
+        when engines die OR drain (departing capacity counts as gone for
+        NEW work), the queue the survivors can absorb in the same time
+        shrinks proportionally, so the watermarks tighten and excess
+        arrivals shed 503-style instead of stranding past their SLOs.
+        Zero serving capacity (all dead/draining, or no instances
+        attached at all) pins the cap to 0: everything rejects
+        503-style, nothing throws."""
         high, low = self.cfg.resolved_watermarks()
-        frac = self.controller.alive_fraction()
+        frac = getattr(self.controller, "serving_fraction",
+                       self.controller.alive_fraction)()
         if frac >= 1.0:
             return self.cfg.queue_depth, high, low
+        if frac <= 0.0:
+            return 0, 0, 0
         cap = max(1, int(self.cfg.queue_depth * frac))
         return cap, max(1, int(high * frac)), int(low * frac)
 

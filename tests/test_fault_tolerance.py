@@ -18,8 +18,8 @@ from repro.analysis.invariants import (InvariantViolation,
                                        check_terminal_states)
 from repro.core.global_scheduler import InstanceInfo
 from repro.core.lso import QLMAgent
-from repro.core.qlm import (DEAD, DEGRADED, HEALTHY, QLMConfig,
-                            QLMController)
+from repro.core.qlm import (DEAD, DEGRADED, DRAINED, DRAINING, HEALTHY,
+                            QLMConfig, QLMController)
 from repro.core.request import make_request
 from repro.core.rwt_estimator import HardwareProfile
 from repro.core.virtual_queue import VirtualQueue
@@ -46,8 +46,20 @@ def _controller(instances, **cfg):
     return QLMController(instances, QLMConfig(**cfg))
 
 
+class _StubStats:
+    """Mutable counter bag matching QLMController._progress_marker."""
+    tokens_generated = 0
+    prefills = 0
+    prefill_chunks = 0
+    evictions = 0
+    resumes = 0
+    model_swaps = 0
+    cancellations = 0
+
+
 class _StubEngine:
-    """Just enough engine surface for mark_dead / QLMAgent plumbing."""
+    """Just enough engine surface for mark_dead / QLMAgent / watchdog
+    plumbing."""
 
     def __init__(self, resident=(), block_mgr=None):
         self.resident = list(resident)
@@ -55,6 +67,10 @@ class _StubEngine:
         self.slots = []
         self._pushback = None
         self.pull_source = None
+        self.stats = _StubStats()
+
+    def num_active(self):
+        return len(self.resident)
 
     def abandon(self):
         out, self.resident = self.resident, []
@@ -65,6 +81,21 @@ class _StubEngine:
     def take_pushback(self):
         p, self._pushback = self._pushback, None
         return p
+
+    def step(self):
+        return []
+
+    def steps(self, n=1):
+        return []
+
+    def prefilling_slots(self):
+        return []
+
+    def decode_slots(self):
+        return []
+
+    def swap_model(self, *a, **kw):
+        return []
 
     def _materialize_pinned_snapshots(self):
         pass
@@ -360,7 +391,11 @@ def _chaos_args(**over):
                        error_prob=0.0, retry_budget=2, round_dt=0.05,
                        max_rounds=600, attainment_floor=0.5,
                        no_supervision=False, replay_check=False,
-                       json=None, timeline=None)
+                       json=None, timeline=None, scenario="kill",
+                       plan_file=None, hang_engine=0, hang_at=6,
+                       hang_grace=None, drain_engine=None,
+                       drain_at_round=None, drain_evict=False,
+                       replace_cooldown=0.5, shared_prefix=None)
     ap_defaults.update(over)
     return chaos, argparse.Namespace(**ap_defaults)
 
@@ -387,3 +422,374 @@ def test_chaos_without_supervision_strands_requests():
     stats = chaos.run_soak(args)
     assert stats["stranded"] > 0
     assert stats["dead_instances"] == []         # controller never learned
+
+
+# ---------------------------------------------------------------------------
+# hang fault + round watchdog
+# ---------------------------------------------------------------------------
+
+def test_hung_engine_stalls_without_raising():
+    """The hang kind is the no-exception failure mode: rounds 'succeed'
+    with zero progress, swap_model is a no-op, dead stays False — only
+    the watchdog can see it."""
+    from repro.serving.faults import FaultyEngine
+    plan = FaultPlan([FaultSpec("round", "hang", at_count=2)], seed=0)
+    eng = FaultyEngine(_StubEngine(), plan, engine_id=0)
+    eng.step()                         # occurrence 1: fine
+    assert not eng.hung
+    for _ in range(5):
+        assert eng.step() == []        # occurrence 2+: silent stall
+    assert eng.hung and not eng.dead
+    assert eng.steps(3) == []
+    assert eng.swap_model("other", None, None) == []
+    # occurrence counters froze at the hang: replay stays deterministic
+    assert len(plan.events) == 1 and plan.events[0]["kind"] == "hang"
+
+
+def test_watchdog_detects_hang_and_kills_without_exception():
+    """A busy instance whose progress marker stays flat past the grace
+    budget is DEGRADED, then mark_dead exactly like a crash — with no
+    exception involved anywhere (crash-only supervision misses this)."""
+    a, b = _instance(0, ["m"]), _instance(1, ["m"])
+    c = _controller([a, b], hang_grace_rounds=2.0, backoff_base_s=0.1)
+    # round deadline from _hw: 0.05 + 0.02*1 + 0.2 = 0.27; budget 0.54
+    stub, peer = _StubEngine(), _StubEngine()
+    c.attach_engines([stub, peer])
+    r = make_request([1, 2, 3], "m", "batch1", arrival_time=0.0,
+                     max_new_tokens=4)
+    assert c.submit(r, 0.0)
+    r._in_flight, r._served_by = True, 0
+    stub.resident = [r]
+
+    c.check_watchdog(0.0)                       # baseline marker
+    assert c.health[0].state == HEALTHY
+    c.check_watchdog(0.4)                       # inside budget: fine
+    assert c.health[0].state == HEALTHY
+    c.check_watchdog(0.6)                       # past 0.54: degraded
+    assert c.health[0].state == DEGRADED
+    # progress resets the stall clock AND heals nothing by itself
+    stub.stats.tokens_generated += 1
+    c.check_watchdog(0.7)
+    c.check_watchdog(1.2)                       # only 0.5 stalled again
+    assert c.health[0].state == DEGRADED
+    c.check_watchdog(0.7 + 0.54 * 3.0 + 0.01)   # past dead factor: killed
+    assert c.health[0].state == DEAD and c.hangs == 1
+    assert "hang" in c.health[0].cause
+    # the stuck resident was redelivered to the survivor, not lost
+    assert not r._in_flight and r.redeliveries == 1
+    assert any(r in g.requests for g in b.virtual_queue.groups)
+
+
+def test_watchdog_ignores_idle_instances():
+    """No work, no deadline: an idle engine's flat counters are not a
+    hang (otherwise every quiet instance would be culled)."""
+    c = _controller([_instance(0, ["m"])], hang_grace_rounds=1.0)
+    c.attach_engines([_StubEngine()])
+    for t in (0.0, 5.0, 50.0):
+        c.check_watchdog(t)
+    assert c.health[0].state == HEALTHY and c.hangs == 0
+
+
+# ---------------------------------------------------------------------------
+# drain lifecycle
+# ---------------------------------------------------------------------------
+
+def test_drain_lets_residents_finish_with_zero_evictions():
+    """Graceful decommission: DRAINING stops new placement while the
+    resident finishes in place; the empty engine is then DRAINED —
+    no eviction, no redelivery, no failure."""
+    a, b = _instance(0, ["m"]), _instance(1, ["m"])
+    c = _controller([a, b])
+    stub, peer = _StubEngine(), _StubEngine()
+    c.attach_engines([stub, peer])
+    r = make_request([1, 2], "m", "batch1", arrival_time=0.0,
+                     max_new_tokens=4)
+    assert c.submit(r, 0.0)
+    r._in_flight, r._served_by = True, 0
+    stub.resident = [r]
+    stub.slots = [r]          # invariant checks look at the slot table
+
+    c.drain_instance(0, 1.0)
+    assert c.health[0].state == DRAINING and c.drains == 1
+    assert c.is_alive(0) and not c.is_schedulable(0)
+    assert not a.virtual_queue.groups            # no longer pullable here
+    # new work routes around the draining instance
+    r2 = make_request([3, 4], "m", "batch1", arrival_time=1.5)
+    assert c.submit(r2, 1.5)
+    assert any(r2 in g.requests for g in b.virtual_queue.groups)
+    # resident still finishing: not decommissioned yet
+    c._finish_drains(2.0)
+    assert c.health[0].state == DRAINING
+    # resident completes in place -> DRAINED, with zero evictions
+    r.generated = 4
+    r.completion_time = 2.5
+    r._in_flight = False
+    stub.resident = []
+    stub.slots = []
+    c._finish_drains(3.0)
+    assert c.health[0].state == DRAINED
+    assert not c.is_alive(0)
+    assert stub.stats.evictions == 0
+    assert r.redeliveries == 0 and not r.failed
+    assert c.serving_fraction() == 0.5 and c.alive_fraction() == 0.5
+
+
+def test_drain_only_from_healthy_or_degraded():
+    c = _controller([_instance(0, ["m"])])
+    c.attach_engines([_StubEngine()])
+    c.mark_dead(0, 1.0, cause="gone")
+    c.drain_instance(0, 2.0)
+    assert c.health[0].state == DEAD and c.drains == 0
+
+
+# ---------------------------------------------------------------------------
+# instance replacement
+# ---------------------------------------------------------------------------
+
+def test_replace_instance_serves_redelivered_work():
+    """Kill-then-replace end to end on real engines: the replacement
+    engine takes the dead slot and the redelivered requests finish."""
+    chaos, args = _chaos_args(scenario="kill-replace", requests=12,
+                              rate=20.0, max_rounds=800)
+    stats = chaos.run_soak(args)
+    assert stats["engine_failures"] >= 1
+    assert stats["replacements"] >= 1
+    assert stats["dead_instances"] == []         # replaced, not a hole
+    assert stats["stranded"] == 0
+    assert stats["served"] == stats["requests"]
+    assert stats["leaked_blocks"] == []
+
+
+def test_replace_instance_rejects_live_slot():
+    c = _controller([_instance(0, ["m"])])
+    c.attach_engines([_StubEngine()])
+    with pytest.raises(ValueError):
+        c.replace_instance(0, _StubEngine(), 1.0)
+    c.mark_dead(0, 1.0, cause="gone")
+    fresh = _StubEngine()
+    c.replace_instance(0, fresh, 2.0)
+    assert c.health[0].state == HEALTHY and c.is_schedulable(0)
+    assert c.replacements == 1
+    assert c._engines[0] is fresh
+
+
+def test_replacement_policy_signals():
+    import math
+    from repro.core.autoscale import ReplacementPolicy
+    c = _controller([_instance(0, ["m"]), _instance(1, ["m"])])
+    c.attach_engines([_StubEngine(), _StubEngine()])
+    pol = ReplacementPolicy(cooldown_s=10.0)
+    assert pol.replacements_due(c, 0.0) == []    # everyone healthy
+    c.mark_dead(1, 1.0, cause="gone")
+    assert pol.replacements_due(c, 2.0) == [1]
+    assert pol.replacements_due(c, 3.0) == []    # inside the cooldown
+    assert pol.replacements_due(c, 13.0) == [1]
+    # queue-drain signal: no schedulable capacity + backlog = infinite
+    r = make_request([1, 2], "m", "batch1", arrival_time=0.0)
+    assert c.submit(r, 0.0)
+    c.mark_dead(0, 14.0, cause="gone")           # quarantines r (unservable)
+    assert pol.queue_drain_s(c) == 0.0           # nothing queued anymore
+    assert c.submit(make_request([1], "m", "batch1", arrival_time=15.0),
+                    15.0) is False               # all-dead gate: rejected
+
+
+# ---------------------------------------------------------------------------
+# zero-capacity guards + redelivery deadline overshoot
+# ---------------------------------------------------------------------------
+
+def test_all_dead_cluster_rejects_without_exceptions():
+    c = _controller([_instance(0, ["m"]), _instance(1, ["m"])])
+    c.attach_engines([_StubEngine(), _StubEngine()])
+    c.mark_dead(0, 1.0, cause="gone")
+    c.mark_dead(1, 1.0, cause="gone")
+    assert c.alive_fraction() == 0.0 and c.serving_fraction() == 0.0
+    assert not c.can_serve("m")
+    r = make_request([1], "m", "interactive", arrival_time=2.0)
+    assert c.submit(r, 2.0) is False and r.rejected
+    c.tick(3.0)                                  # ticking a dead cluster: ok
+    c.check_watchdog(3.0)
+    c.gc_groups()
+
+
+def test_redelivery_backoff_overshooting_deadline_quarantines():
+    """A redelivered request whose backoff window lands past its deadline
+    can never be served in time: quarantine immediately instead of
+    burning a pull + prefill on a guaranteed miss."""
+    inst = _instance(0, ["m"])
+    c = _controller([inst], retry_budget=5, backoff_base_s=10.0,
+                    backoff_cap_s=10.0)
+    r = make_request([1, 2], "m", "interactive", arrival_time=0.0)
+    r.slo = 1.0                                  # deadline = 1.0
+    assert c.submit(r, 0.0)
+    c._redeliver(r, 0.5)                         # 0.5 + 10.0 >> 1.0
+    assert r.failed and r.dropped()
+    assert "overshoots deadline" in r.fail_cause
+    assert r in c.failed
+    # but a request that already streamed its first token is NOT cut off
+    r2 = make_request([1, 2], "m", "interactive", arrival_time=0.0)
+    r2.slo = 1.0
+    assert c.submit(r2, 0.0)
+    r2.first_token_time = 0.2
+    c._redeliver(r2, 0.5)
+    assert not r2.failed and r2.not_before == pytest.approx(10.5)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan JSON round trip
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_from_json_replays_identically():
+    import json as _json
+    specs = [FaultSpec("decode", "error", prob=0.2, max_fires=3),
+             FaultSpec("round", "hang", engine=0, at_count=5),
+             FaultSpec("decode", "crash", engine=1, at_count=7)]
+    plan = FaultPlan(specs, seed=11)
+    blob = _json.dumps({
+        "seed": 11,
+        "specs": [{"site": s.site, "kind": s.kind, "engine": s.engine,
+                   "at_count": s.at_count, "prob": s.prob,
+                   "max_fires": s.max_fires} for s in specs],
+        "events": [{"stale": "timeline entries must be dropped"}],
+    })
+    loaded = FaultPlan.from_json(blob)
+    assert loaded.seed == 11 and not loaded.events
+    fresh = plan.fresh()
+    assert _drive(loaded) == _drive(fresh)
+    assert loaded.timeline() == fresh.timeline()
+    with pytest.raises(ValueError):
+        FaultPlan.from_json(_json.dumps({"seed": 0, "specs": [
+            {"site": "decode", "kind": "meltdown", "at_count": 1}]}))
+
+
+# ---------------------------------------------------------------------------
+# cross-engine snapshot migration (real engines)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mig_model():
+    import jax
+    from repro.configs import ARCHITECTURES
+    from repro.models import build_model
+    cfg = ARCHITECTURES["granite-3-2b"].reduced(num_layers=1, d_model=64)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return model, params
+
+
+def _mig_engine(model, params):
+    from repro.serving import ContinuousBatchingEngine, EngineConfig
+    cfg = EngineConfig(max_slots=4, max_seq_len=64, block_size=8,
+                       prefill_chunk_tokens=16,
+                       attention_backend="paged-xla", prefix_sharing=True)
+    return ContinuousBatchingEngine(model, params, cfg, model_name="m1")
+
+
+def test_migrated_snapshot_resumes_token_identical(mig_model):
+    """The migration contract end to end at the engine layer: a live-
+    pinned mid-decode snapshot is materialized on its source engine,
+    resumed on a DIFFERENT engine, and finishes with exactly the tokens
+    an uninterrupted run produces — with the source pool fully released
+    (source pins dropped iff destination pages live)."""
+    from repro.core.request import Request
+    model, params = mig_model
+    shared = list(range(1, 13))                 # > 1 full block shared
+    prompts = [shared + [50, 51], shared + [60, 61, 62]]
+
+    def req(p):
+        return Request(prompt_tokens=list(p), model="m1", slo=1e9,
+                       max_new_tokens=6)
+
+    # uninterrupted baseline on a single engine
+    base = _mig_engine(model, params)
+    base_reqs = [req(p) for p in prompts]
+    assert base.admit(base_reqs[0])
+    while base.prefilling_slots():
+        base.step()
+    assert base.admit(base_reqs[1])
+    for _ in range(80):
+        base.step()
+        if all(r.finished() for r in base_reqs):
+            break
+    want = [r.output_tokens for r in base_reqs]
+    assert all(len(t) == 6 for t in want)
+
+    # source engine: same admissions, evict rb mid-decode (pins exist
+    # because ra still shares the prefix chain)
+    eng_a = _mig_engine(model, params)
+    eng_b = _mig_engine(model, params)
+    ra, rb = [req(p) for p in prompts]
+    assert eng_a.admit(ra)
+    while eng_a.prefilling_slots():
+        eng_a.step()
+    assert eng_a.admit(rb)
+    eng_a.step()
+    eng_a.step()
+    assert rb.generated > 0                     # genuinely mid-decode
+    eng_a.evict_request(rb.req_id)
+    assert rb.snapshot["pinned"], "no pins: the scenario is vacuous"
+    # a live-pinned mid-decode snapshot is engine-local...
+    assert not eng_b.can_admit(rb)
+    # ...until the owner materializes it into portable form
+    assert eng_a.materialize_snapshot(rb)
+    assert rb.snapshot is not None and not rb.snapshot["pinned"]
+    assert eng_a.stats.migrations_out == 1
+    # destination resumes it mid-decode, token state intact
+    assert eng_b.admit(rb)
+    assert eng_b.stats.migrations_in == 1 and eng_b.stats.resumes == 1
+    for _ in range(80):
+        eng_a.step()
+        eng_b.step()
+        if ra.finished() and rb.finished():
+            break
+    assert ra.finished() and rb.finished()
+    assert [ra.output_tokens, rb.output_tokens] == want
+    # both pools fully released: no pinned-forever source pages
+    assert eng_a.block_mgr.used_blocks == 0 and not eng_a.block_mgr._pins
+    assert eng_b.block_mgr.used_blocks == 0
+
+
+def test_migration_sweep_moves_orphaned_pinned_snapshot(mig_model):
+    """Controller-level migration: a queued request whose snapshot pins
+    pages on instance A but whose group landed on instance B is
+    materialized by the sweep (A's pins released, snapshot portable)."""
+    model, params = mig_model
+    from repro.core.request import Request
+    eng_a, eng_b = _mig_engine(model, params), _mig_engine(model, params)
+    a, b = _instance(0, ["m1"]), _instance(1, ["m1"])
+    c = _controller([a, b])
+    c.attach_engines([eng_a, eng_b])
+
+    shared = list(range(1, 13))
+    ra = Request(prompt_tokens=shared + [50], model="m1", slo=1e9,
+                 max_new_tokens=6, arrival_time=0.0)
+    rb = Request(prompt_tokens=shared + [60, 61], model="m1", slo=1e9,
+                 max_new_tokens=6, arrival_time=0.0)
+    assert c.submit(ra, 0.0) and c.submit(rb, 0.0)
+    assert eng_a.admit(ra)
+    ra._in_flight, ra._served_by = True, 0
+    while eng_a.prefilling_slots():
+        eng_a.step()
+    assert eng_a.admit(rb)
+    eng_a.step()
+    eng_a.step()
+    eng_a.evict_request(rb.req_id)
+    assert rb.snapshot["pinned"]
+    # strand rb's placement on instance 1 while its pins live in pool 0
+    rb._in_flight, rb._served_by = False, None
+    for g in list(a.virtual_queue.groups):
+        if rb in g.requests:
+            a.virtual_queue.groups.remove(g)
+            b.virtual_queue.groups.append(g)
+    migrated_before = c.migrations
+    c.migration_sweep(1.0)
+    assert c.migrations == migrated_before + 1
+    assert rb.snapshot is not None and not rb.snapshot["pinned"]
+    # destination can now take it; source keeps serving ra
+    assert eng_b.admit(rb)
+    for _ in range(80):
+        eng_a.step()
+        eng_b.step()
+        if ra.finished() and rb.finished():
+            break
+    assert ra.finished() and rb.finished()
+    assert eng_a.block_mgr.used_blocks == 0 and not eng_a.block_mgr._pins
