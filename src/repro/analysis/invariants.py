@@ -83,6 +83,7 @@ so the whole tier-1 suite doubles as an invariant suite.
 from __future__ import annotations
 
 import os
+import threading
 from typing import Any, Dict, List, Optional
 
 import numpy as np
@@ -107,15 +108,22 @@ def sample_every() -> int:
 
 
 class InvariantSampler:
-    """Counter-based sampling: ``due()`` is True every Nth call."""
+    """Counter-based sampling: ``due()`` is True every Nth call.
+
+    Thread-safe: one sampler is shared by every hooked BlockManager
+    mutator and engine round across the threaded cluster's agent
+    threads, and a racy ``+=`` would silently drift the sampling period
+    (or double-fire the due slot)."""
 
     def __init__(self, every: Optional[int] = None):
         self.every = sample_every() if every is None else max(1, every)
         self._n = 0
+        self._lock = threading.Lock()
 
     def due(self) -> bool:
-        self._n += 1
-        return self._n % self.every == 0
+        with self._lock:
+            self._n += 1
+            return self._n % self.every == 0
 
 
 def _fail(where: str, msg: str) -> None:

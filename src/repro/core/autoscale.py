@@ -57,17 +57,29 @@ def find_min_instances(run_with_n: Callable[[int], Dict[str, float]],
 class AdmissionController:
     """§9(c): reject incoming requests when the RWT-estimated queue drain
     already exceeds ``max_drain_s`` (rate limiting keeps the queue bounded
-    so admitted requests can still meet SLOs)."""
+    so admitted requests can still meet SLOs).
+
+    ``hw`` must be the CALIBRATED profile of the instances that can serve
+    the request's model, and ``n_instances`` the number of schedulable
+    such instances: the gate sees the cluster-wide queue depth, so
+    dividing it by a single instance's throughput over-rejects by a
+    factor of the cluster size (the PR 6 ``--admit-drain slo``
+    over-rejection on small-model CPU setups)."""
     estimator: RWTEstimator
     hw: HardwareProfile
     max_drain_s: float
+    n_instances: int = 1
     rejected: List[Request] = dataclasses.field(default_factory=list)
 
     def admit(self, req: Request, queue_pending_requests: int,
               wl: Optional[WorkloadProfile] = None) -> bool:
         wl = wl or WorkloadProfile(req.prompt_len, 1.0,
                                    float(req.max_new_tokens), 1.0)
-        est = self.estimator.waiting_time(queue_pending_requests, wl, self.hw)
+        # load-balanced split: each serving instance drains its share of
+        # the queue, so the per-instance depth is ceil(depth / n)
+        n = max(1, self.n_instances)
+        depth = -(-max(queue_pending_requests, 0) // n)
+        est = self.estimator.waiting_time(depth, wl, self.hw)
         if est.conservative(self.estimator.z) > self.max_drain_s:
             self.rejected.append(req)
             return False

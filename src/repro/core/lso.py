@@ -13,6 +13,7 @@ intelligence lives in the global scheduler's VQ ordering:
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Callable, Dict, Optional, Tuple
 
 from repro.core.request import Request
@@ -31,29 +32,44 @@ class QLMAgent:
         self.enable_eviction = enable_eviction
         self.enable_swap = enable_swap
         self._last_head = None  # eviction fires on head-group CHANGE (§5)
+        # Queue-layer guard for threaded serving: the cluster runtime
+        # binds this to ``QLMController.lock`` so ``_pull`` (fired
+        # mid-round via ``engine.pull_source``) and ``sync`` serialize
+        # against ticks / submits / mark_dead.  Lock order is
+        # engine.lock -> queue_lock (run_iteration holds the engine lock
+        # around the whole quantum); the controller side never blocks on
+        # engine locks, so the cross order cannot deadlock.  Default is
+        # a no-op for single-threaded drivers.
+        self.queue_lock: contextlib.AbstractContextManager = \
+            contextlib.nullcontext()
         engine.pull_source = self._pull
 
     # -- request pulling LSO ------------------------------------------------
     def _pull(self) -> Optional[Request]:
-        pushed = self.engine.take_pushback()
-        if pushed is not None:
-            pushed._in_flight = False
-            pushed._served_by = None
-        # clock-gated: redelivered requests in exponential backoff
-        # (not_before) are skipped until their window opens
-        req = self.vq.next_request(self.engine.model_name,
-                                   now=self.engine.clock())
-        if req is None:
-            return None
-        req._in_flight = True
-        # tag the serving instance: on engine death the supervisor sweeps
-        # the global queue for _served_by == this VQ's instance
-        req._served_by = self.vq.instance_id
-        return req
+        with self.queue_lock:
+            pushed = self.engine.take_pushback()
+            if pushed is not None:
+                pushed._in_flight = False
+                pushed._served_by = None
+            # clock-gated: redelivered requests in exponential backoff
+            # (not_before) are skipped until their window opens
+            req = self.vq.next_request(self.engine.model_name,
+                                       now=self.engine.clock())
+            if req is None:
+                return None
+            req._in_flight = True
+            # tag the serving instance: on engine death the supervisor
+            # sweeps the global queue for _served_by == this VQ's instance
+            req._served_by = self.vq.instance_id
+            return req
 
     # -- eviction + swap LSOs -------------------------------------------------
     def sync(self) -> None:
         """Reconcile engine state with the (possibly re-ordered) VQ."""
+        with self.queue_lock:
+            self._sync_locked()
+
+    def _sync_locked(self) -> None:
         head = self.vq.head_group()
         if head is None:
             return
@@ -93,15 +109,24 @@ class QLMAgent:
         of assuming continuity with pre-failure state — and drain any
         pushback limbo so no request strands with ``_in_flight=True``."""
         self._last_head = None
-        pushed = self.engine.take_pushback()
-        if pushed is not None:
-            pushed._in_flight = False
-            pushed._served_by = None
+        with self.queue_lock:
+            pushed = self.engine.take_pushback()
+            if pushed is not None:
+                pushed._in_flight = False
+                pushed._served_by = None
 
     def run_iteration(self):
         """sync + one engine iteration (the serve loop quantum).  Engines
         configured with ``decode_burst > 1`` fuse up to that many decode
         iterations into the dispatch (``steps()`` falls back to ``step()``
-        at burst 1, and to single-step whenever a slot is mid-prefill)."""
-        self.sync()
-        return self.engine.steps()
+        at burst 1, and to single-step whenever a slot is mid-prefill)).
+
+        The whole quantum runs under the engine's round lock: the
+        controller's cross-thread LSO touches (migration materialize,
+        drain eviction, dead-engine salvage) are excluded from the
+        middle of a dispatch, and because those sites only try-lock,
+        holding it for the full quantum is deadlock-free."""
+        lock = getattr(self.engine, "lock", None)
+        with lock if lock is not None else contextlib.nullcontext():
+            self.sync()
+            return self.engine.steps()

@@ -7,10 +7,14 @@ both expose instances as ``core.global_scheduler.InstanceInfo``.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import functools
 import math
+import threading
 from typing import Callable, List, Optional, Sequence
 
+from repro.core import routing
 from repro.core.global_scheduler import GlobalScheduler, InstanceInfo
 from repro.core.request import Request
 from repro.core.request_group import (RequestGroup, classify_into_groups,
@@ -23,6 +27,14 @@ class QLMConfig:
     avg_batch_size: float = 32.0
     delta: float = 4.0            # request-group size multiple (§8.3: δ=4)
     z_conservative: float = 1.0   # RWT tail factor
+    # Placement policy: "solver" = per-group MILP/local-search placement
+    # (core/solver.py via GlobalScheduler), "slice" = slice-level
+    # load balancing (core/routing.py): groups re-partitioned into
+    # slices of <= slice_size requests, each placed by estimated
+    # earliest finish.  slice_size None means one engine batch quantum
+    # (avg_batch_size).
+    routing: str = "solver"
+    slice_size: Optional[int] = None
     reschedule_on_arrival: bool = True
     # min sim-seconds between solver invocations: the paper runs the global
     # scheduler OFF the critical path ("overheads can be hidden", §8.3), so
@@ -81,6 +93,53 @@ DRAINED = "drained"     # decommissioned cleanly (pool empty, not lost)
 DEAD = "dead"
 
 
+def _locked(method):
+    """Serialize a controller entry point on ``self.lock``.
+
+    The lock is an RLock, so locked entry points freely call each other
+    (``mark_dead`` -> ``reschedule`` -> ``gc_groups``).  Lock ORDER with
+    the per-engine locks: an agent thread acquires its ``engine.lock``
+    FIRST and the controller lock second (``engine.pull_source`` fires
+    mid-round); the controller thread therefore only ever takes engine
+    locks NON-blocking / bounded (``_engine_guard``) while holding this
+    one, so the cross order cannot deadlock — worst case is a bounded
+    stall, after which the controller proceeds best-effort."""
+    @functools.wraps(method)
+    def wrapper(self, *args, **kwargs):
+        with self.lock:
+            return method(self, *args, **kwargs)
+    return wrapper
+
+
+@contextlib.contextmanager
+def _engine_guard(engine, timeout: float = 0.0):
+    """Bounded acquire of an engine's round lock from the CONTROLLER side
+    (never block indefinitely: the agent thread holding it may itself be
+    waiting on the controller lock — the one cross-order that could
+    deadlock).  Tri-state yield:
+
+      * ``True``  — lock taken; engine state may be mutated safely.
+      * ``None``  — the engine has no lock (single-threaded drivers,
+        lockless sim engines): proceed unguarded, nothing races.
+      * ``False`` — CONTENDED MISS: an agent thread is mid-round
+        (typically blocked on the controller lock inside ``_pull``).
+        The caller must NOT touch engine slots/pools — mutating them
+        under a live round corrupts it.  Defer the work and retry from
+        ``tick`` once the round finishes.
+    """
+    lock = getattr(engine, "lock", None)
+    if lock is None:
+        yield None
+        return
+    got = lock.acquire(timeout=timeout) if timeout > 0 \
+        else lock.acquire(blocking=False)
+    try:
+        yield got
+    finally:
+        if got:
+            lock.release()
+
+
 @dataclasses.dataclass
 class InstanceHealth:
     state: str = HEALTHY
@@ -99,6 +158,18 @@ class QLMController:
     def __init__(self, instances: Sequence[InstanceInfo],
                  cfg: Optional[QLMConfig] = None, seed: int = 0):
         self.cfg = cfg or QLMConfig()
+        if self.cfg.routing not in routing.ROUTING_POLICIES:
+            raise ValueError(
+                f"unknown routing policy {self.cfg.routing!r}; "
+                f"expected one of {routing.ROUTING_POLICIES}")
+        # Guards the whole queue layer (global_queue, groups, VQ group
+        # lists, health, scheduler state) against concurrent agent
+        # threads: every public entry point is @_locked, and threaded
+        # agents take this lock around ``_pull``/``sync`` (see
+        # ``QLMAgent.queue_lock``), so FCFS pops and ``not_before``
+        # redelivery gates stay race-free.  Reentrant: entry points
+        # compose.  Single-threaded drivers pay one uncontended acquire.
+        self.lock = threading.RLock()
         self.instances = list(instances)
         self.estimator = RWTEstimator(self.cfg.z_conservative)
         self.scheduler = GlobalScheduler(self.estimator, seed=seed)
@@ -124,6 +195,11 @@ class QLMController:
         self.health: List[InstanceHealth] = [InstanceHealth()
                                              for _ in self.instances]
         self.redeliveries = 0        # total redelivery events (stats)
+        self.routing_invocations = 0  # slice_schedule runs (routing="slice")
+        # engine-touching LSOs deferred on a contended engine guard
+        # (threaded agents mid-round); retried from tick()
+        self._pending_salvage: List = []      # [(idx, engine), ...]
+        self._pending_evicts: dict = {}       # idx -> (engine, evict)
         # lifecycle stats (self-healing cluster: see docs/fault_tolerance.md)
         self.hangs = 0               # watchdog-detected hangs (mark_dead'd)
         self.drains = 0              # drain_instance invocations
@@ -136,6 +212,7 @@ class QLMController:
         self._last_reschedule = -math.inf
 
     # -- supervision -------------------------------------------------------
+    @_locked
     def attach_engines(self, engines: Sequence) -> None:
         """Register the engine behind each instance (order-aligned with
         ``instances``).  Optional: without it, mark_dead() can only sweep
@@ -184,6 +261,7 @@ class QLMController:
         return any(model in i.hw_by_model
                    for i in self.schedulable_instances())
 
+    @_locked
     def heartbeat(self, idx: int, now: float) -> None:
         """A successful agent iteration: reset the strike/missed counters
         and recover a DEGRADED instance (DEAD/DRAINED stay departed — the
@@ -198,6 +276,7 @@ class QLMController:
         if h.state == DEGRADED:
             h.state = HEALTHY
 
+    @_locked
     def check_heartbeats(self, now: float) -> None:
         """Tick-side liveness: an instance whose agent has not heartbeated
         for ``heartbeat_timeout_s`` misses windows; enough misses degrade
@@ -258,6 +337,7 @@ class QLMController:
         vq = self.instances[idx].virtual_queue
         return vq.pending_requests() > 0
 
+    @_locked
     def check_watchdog(self, now: float) -> None:
         """Per-round-deadline hang detection.  Heartbeats only fire on
         success, and a hung engine's rounds SUCCEED (they just do
@@ -297,6 +377,7 @@ class QLMController:
             elif stalled > budget and h.state == HEALTHY:
                 h.state = DEGRADED
 
+    @_locked
     def report_engine_failure(self, idx: int, exc: BaseException, now: float,
                               engine=None) -> str:
         """Agent-exception supervision: fatal failures (``EngineCrashed`` /
@@ -327,6 +408,7 @@ class QLMController:
         return min(self.cfg.backoff_cap_s,
                    self.cfg.backoff_base_s * (2.0 ** (n - 1)))
 
+    @_locked
     def mark_dead(self, idx: int, now: float, cause: str = "killed",
                   engine=None) -> None:
         """Quarantine instance ``idx`` and recover its work (§4 fault
@@ -356,8 +438,25 @@ class QLMController:
             engine = self._engines[idx]
         dead_inst = self.instances[idx]
         dead_inst.virtual_queue.groups.clear()
+        # 2.-5. need the engine quiescent: a contended miss means the
+        # agent thread is MID-ROUND (usually blocked on our lock inside
+        # ``_pull``) — abandoning slots or redelivering its residents now
+        # would corrupt the live round / double-serve its requests.  The
+        # instance is already DEAD, so the agent parks after this round
+        # and the deferred salvage succeeds on the next tick.
+        with _engine_guard(engine, timeout=1.0) as got:
+            if got is False:
+                self._pending_salvage.append((idx, engine))
+                return
+            self._salvage_dead(idx, engine, now)
+        self._check_invariants()
+
+    def _salvage_dead(self, idx: int, engine, now: float) -> None:
+        """Steps 2.-5. of ``mark_dead`` (caller holds the engine guard —
+        or the engine is lockless / known parked)."""
         dead_pool = getattr(engine, "block_mgr", None)
-        # 2. reclaim engine-resident requests (crash salvage)
+        # 2. reclaim engine-resident requests (crash salvage): KV
+        # accounting freed host-side, nothing stamped terminal
         if engine is not None and hasattr(engine, "abandon"):
             for r in engine.abandon():
                 if not r.finished():
@@ -395,7 +494,6 @@ class QLMController:
             # snapshots are pinned in some OTHER alive pool must become
             # portable, or their new server refuses them forever
             self.migration_sweep(now)
-        self._check_invariants()
 
     def _redeliver(self, r: Request, now: float) -> None:
         """Return an in-flight request to the (still-placed) global queue
@@ -445,6 +543,7 @@ class QLMController:
         self.failed.append(r)
 
     # -- graceful drain + replacement (self-healing lifecycle) ----------
+    @_locked
     def drain_instance(self, idx: int, now: float, *, evict: bool = False,
                        cause: str = "drain") -> None:
         """Graceful-decommission LSO: stop pulling new work onto instance
@@ -463,26 +562,16 @@ class QLMController:
         inst.virtual_queue.groups.clear()
         engine = self._engines[idx] if self._engines is not None else None
         if engine is not None:
-            if evict and hasattr(engine, "evict_slot"):
-                for slot in list(engine.active_slots()):
-                    r = engine.evict_slot(slot)
-                    r._in_flight = False
-                    r._served_by = None
-                pushed = engine.take_pushback()
-                if pushed is not None:
-                    pushed._in_flight = False
-                    pushed._served_by = None
-            # departing capacity must not hold anyone's prefix pages:
-            # promote every snapshot pinned in this pool to portable form
-            # now, so the requests resume on OTHER engines (cross-engine
-            # migration) instead of waiting out the drain
-            pinned_here = [r for r in getattr(engine, "_pinned_snapshots",
-                                              ())
-                           if r.snapshot is not None
-                           and r.snapshot.get("pinned")]
-            if pinned_here:
-                engine._materialize_pinned_snapshots()
-                self.migrations += len(pinned_here)
+            # bounded engine-lock wait: the draining engine's agent
+            # thread is still running rounds (residents finish in place).
+            # A contended miss means the agent is mid-round — evicting
+            # its slots now would corrupt the round, so the evict defers
+            # to the next tick (the round finishes, the lock frees).
+            with _engine_guard(engine, timeout=1.0) as got:
+                if got is False:
+                    self._pending_evicts[idx] = (engine, evict)
+                else:
+                    self._drain_evict(engine, evict)
         # queued work that just lost its last schedulable server is a
         # recorded miss (residents still finish on the draining engine)
         for r in list(self.global_queue):
@@ -506,6 +595,77 @@ class QLMController:
             self.migration_sweep(now)
         self._check_invariants()
 
+    def _drain_evict(self, engine, evict: bool) -> None:
+        """Engine-touching half of ``drain_instance`` (caller holds the
+        engine guard — or the engine is lockless)."""
+        if evict and hasattr(engine, "evict_slot"):
+            for slot in list(engine.active_slots()):
+                r = engine.evict_slot(slot)
+                r._in_flight = False
+                r._served_by = None
+            pushed = engine.take_pushback()
+            if pushed is not None:
+                pushed._in_flight = False
+                pushed._served_by = None
+        # departing capacity must not hold anyone's prefix pages:
+        # promote every snapshot pinned in this pool to portable form
+        # now, so the requests resume on OTHER engines (cross-engine
+        # migration) instead of waiting out the drain
+        pinned_here = [r for r in getattr(engine, "_pinned_snapshots", ())
+                       if r.snapshot is not None
+                       and r.snapshot.get("pinned")]
+        if pinned_here:
+            engine._materialize_pinned_snapshots()
+            self.migrations += len(pinned_here)
+
+    @_locked
+    def _retry_deferred(self, now: float) -> None:
+        """Tick-side retry of engine-touching LSOs that hit a contended
+        engine guard (the agent was mid-round when ``mark_dead`` /
+        ``drain_instance`` ran).  Dead/draining agents park or finish
+        their round quickly, so these drain within a tick or two."""
+        if self._pending_salvage:
+            still = []
+            for idx, engine in self._pending_salvage:
+                with _engine_guard(engine) as got:
+                    if got is False:
+                        still.append((idx, engine))
+                        continue
+                    self._salvage_dead(idx, engine, now)
+            self._pending_salvage = still
+        for idx in list(self._pending_evicts):
+            engine, evict = self._pending_evicts[idx]
+            if self.health[idx].state != DRAINING:
+                # the drain resolved some other way (e.g. the instance
+                # died outright and was salvaged)
+                del self._pending_evicts[idx]
+                continue
+            with _engine_guard(engine) as got:
+                if got is False:
+                    continue
+                self._drain_evict(engine, evict)
+            del self._pending_evicts[idx]
+            # evicted members are pullable again, but their groups may be
+            # parked on the (non-schedulable) draining VQ as residents-
+            # only remnants: re-place them on the survivors
+            self.instances[idx].virtual_queue.groups.clear()
+            self.gc_groups()
+            for g in self.groups:
+                if g.done() or self._placed(g):
+                    continue
+                if self.can_serve(g.model):
+                    self._place_new_group(g, now)
+                else:
+                    for r in g.requests:
+                        if not r.finished():
+                            self._quarantine(r, now, (
+                                f"model {r.model} unservable after "
+                                f"deferred evict on instance {idx}"))
+            if self.schedulable_instances():
+                self.reschedule(now)
+                self.migration_sweep(now)
+
+    @_locked
     def _finish_drains(self, now: float) -> None:
         """Decommission DRAINING instances whose engines emptied out:
         state -> DRAINED, VQ cleared, any member a late pushback left
@@ -538,6 +698,7 @@ class QLMController:
                                 f"instance {idx} drained"))
             self._check_invariants()
 
+    @_locked
     def replace_instance(self, idx: int, engine, now: float,
                          hw_by_model=None, model_name=None) -> None:
         """Attach a fresh engine in a departed slot: DEAD/DRAINED stops
@@ -551,6 +712,19 @@ class QLMController:
             raise ValueError(
                 f"instance {idx} is {h.state}: only departed "
                 f"(dead/drained) instances can be replaced")
+        # flush any salvage still deferred for this slot BEFORE the new
+        # engine takes it: the retry keys requests on ``_served_by ==
+        # idx``, which would resolve to the REPLACEMENT after this point.
+        # The departed agent is parked, so the bounded wait succeeds; on
+        # a pathological miss salvage proceeds unguarded — the old
+        # engine is being discarded either way.
+        for i, old_engine in [p for p in self._pending_salvage
+                              if p[0] == idx]:
+            with _engine_guard(old_engine, timeout=1.0):
+                self._salvage_dead(i, old_engine, now)
+        self._pending_salvage = [p for p in self._pending_salvage
+                                 if p[0] != idx]
+        self._pending_evicts.pop(idx, None)
         inst = self.instances[idx]
         inst.virtual_queue.groups.clear()
         if hw_by_model is not None:
@@ -578,6 +752,7 @@ class QLMController:
                 return idx
         return None
 
+    @_locked
     def migration_sweep(self, now: float) -> int:
         """Make stranded-by-pinning snapshots portable (the recovery half
         of the eviction LSO).  A request whose snapshot pins shared-
@@ -615,10 +790,21 @@ class QLMController:
             if home == owner and self.is_schedulable(owner):
                 continue   # its own engine will resume it: pins transfer
             engine = self._engines[owner]
-            if hasattr(engine, "materialize_snapshot") \
-                    and engine.materialize_snapshot(r):
-                migrated += 1
-                self.migrations += 1
+            if not hasattr(engine, "materialize_snapshot"):
+                continue
+            # non-blocking: the owner's agent may be mid-round — skip
+            # this snapshot and retry on the next tick's sweep rather
+            # than stall the controller (``got`` is False only when a
+            # REAL lock was busy; lockless engines proceed unguarded)
+            with _engine_guard(engine) as got:
+                if got is False:
+                    # real lock busy (agent mid-round): skip this sweep
+                    # rather than stall the controller; lockless engines
+                    # yield None and proceed unguarded
+                    continue
+                if engine.materialize_snapshot(r):
+                    migrated += 1
+                    self.migrations += 1
         return migrated
 
     @property
@@ -626,6 +812,7 @@ class QLMController:
         return max(1, int(self.cfg.avg_batch_size * self.cfg.delta))
 
     # ------------------------------------------------------------------
+    @_locked
     def submit(self, req: Request, now: float) -> bool:
         """API-gateway entry: enqueue, classify into a group, reschedule if
         the RWT estimator predicts a violation.
@@ -660,6 +847,7 @@ class QLMController:
             self.reschedule(now)
         return True
 
+    @_locked
     def submit_batch(self, requests: Sequence[Request], now: float) -> None:
         """Bulk arrival: form groups with Algorithm 1 k-means, then solve."""
         self.global_queue.extend(requests)
@@ -674,6 +862,7 @@ class QLMController:
         return any(g is q for inst in self.instances
                    for q in inst.virtual_queue.groups)
 
+    @_locked
     def record_rejection(self, req: Request, now: float) -> None:
         """Admission-control / backpressure rejection (§9 option (c)):
         the request never enters the global queue, but attainment
@@ -709,6 +898,7 @@ class QLMController:
         inst.virtual_queue.groups.append(g)
 
     # ------------------------------------------------------------------
+    @_locked
     def reschedule(self, now: float):
         """Re-solve over the SCHEDULABLE instances only: dead/drained VQs
         were emptied when the instance departed and must stay empty, and
@@ -716,9 +906,13 @@ class QLMController:
         count on."""
         self.gc_groups()
         self._last_reschedule = now
+        if self.cfg.routing == "slice":
+            self.routing_invocations += 1
+            return routing.slice_schedule(self, now)
         return self.scheduler.schedule(self.groups,
                                        self.schedulable_instances(), now)
 
+    @_locked
     def tick(self, now: float) -> bool:
         """Periodic violation check (returns True if it rescheduled).
 
@@ -730,6 +924,7 @@ class QLMController:
         """
         self.check_watchdog(now)
         self.check_heartbeats(now)
+        self._retry_deferred(now)
         self._finish_drains(now)
         self.migration_sweep(now)
         if now - self._last_reschedule < self.cfg.reschedule_cooldown:
@@ -747,7 +942,16 @@ class QLMController:
 
     def _check_invariants(self) -> None:
         """Tick-boundary hook: queue-layer state (group placement, member
-        ownership) is only quiescent between scheduler actions."""
+        ownership) is only quiescent between scheduler actions.
+
+        Thread-awareness: ``check_queue_layer`` touches only
+        controller-lock-guarded state, so it always runs.  The
+        engine-residency cross-checks (``check_terminal_states`` /
+        ``check_migration``) read every engine's slots and pushback,
+        which are only consistent at round boundaries — so they run
+        only when every engine's round lock try-acquires (i.e. every
+        engine is between rounds).  A busy engine defers them to the
+        next tick; single-threaded drivers always acquire."""
         if not self.cfg.debug_invariants:
             from repro.analysis.invariants import invariants_enabled
             if not invariants_enabled():
@@ -755,16 +959,32 @@ class QLMController:
         if self._inv_sampler is None:
             from repro.analysis.invariants import InvariantSampler
             self._inv_sampler = InvariantSampler()
-        if self._inv_sampler.due():
-            from repro.analysis.invariants import (check_migration,
-                                                   check_queue_layer,
-                                                   check_terminal_states)
-            check_queue_layer(self, where="controller.tick")
-            check_terminal_states(self, engines=self._engines,
-                                  where="controller.tick")
-            check_migration(self, engines=self._engines,
-                            where="controller.tick")
+        if not self._inv_sampler.due():
+            return
+        from repro.analysis.invariants import (check_migration,
+                                               check_queue_layer,
+                                               check_terminal_states)
+        if self._pending_salvage or self._pending_evicts:
+            # deferred salvage/evict means the queue layer is knowingly
+            # mid-transition (a dead VQ is cleared but its groups are not
+            # re-placed until the retry lands, and some engine's
+            # residency state is stale): skip ALL checks until then
+            return
+        check_queue_layer(self, where="controller.tick")
+        with contextlib.ExitStack() as stack:
+            quiescent = True
+            for eng in (self._engines or ()):
+                guard = stack.enter_context(_engine_guard(eng))
+                if guard is False:
+                    quiescent = False
+                    break
+            if quiescent:
+                check_terminal_states(self, engines=self._engines,
+                                      where="controller.tick")
+                check_migration(self, engines=self._engines,
+                                where="controller.tick")
 
+    @_locked
     def gc_groups(self) -> None:
         self.groups = [g for g in self.groups if not g.done()]
         still = []
@@ -776,6 +996,7 @@ class QLMController:
     def all_requests(self) -> List[Request]:
         return self.finished + self.global_queue
 
+    @_locked
     def slo_attainment(self, now: Optional[float] = None) -> float:
         """Fraction of SCORED requests that met their TTFT SLO.
 

@@ -92,6 +92,29 @@ def evaluate(assignment: Sequence[Sequence[int]], groups: Sequence[GroupSpec],
     return violation, total
 
 
+def per_instance_makespan(assignment: Sequence[Sequence[int]],
+                          groups: Sequence[GroupSpec],
+                          instances: Sequence[InstanceSpec]) -> List[float]:
+    """Estimated finish time of each instance's queue under an assignment
+    (the Eq. 10 walk without the penalty fold).  Load-balance metric for
+    the routing comparison (``core/routing.py`` computes the same vector
+    for live virtual queues): the spread between the max and min entries
+    is the wall-clock an idle instance spends waiting on a loaded one."""
+    out: List[float] = []
+    for qi, order in enumerate(assignment):
+        inst = instances[qi]
+        t = 0.0
+        cur = inst.current_model
+        for gi in order:
+            g = groups[gi]
+            if g.model != cur:
+                t += inst.swap_time.get(g.model, 0.0)
+                cur = g.model
+            t += g.drain_time[inst.instance_id]
+        out.append(t)
+    return out
+
+
 def _objective(assignment, groups, instances,
                objective: str = "penalty") -> Tuple[float, float]:
     return evaluate(assignment, groups, instances, objective)

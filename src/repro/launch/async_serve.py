@@ -84,7 +84,9 @@ def build_cluster(args, registry, hw_by_model, arch_names):
         infos.append(InstanceInfo(i, dict(hw_by_model), eng.model_name, vq))
     controller = QLMController(
         infos, QLMConfig(avg_batch_size=args.slots,
-                         reschedule_cooldown=args.reschedule_cooldown))
+                         reschedule_cooldown=args.reschedule_cooldown,
+                         routing=getattr(args, "routing", "solver")))
+    controller.attach_engines(engines)
     return engines, agents, infos, controller
 
 
@@ -260,6 +262,9 @@ def main(argv=None) -> dict:
     ap.add_argument("--think-time", type=float, default=0.05)
     ap.add_argument("--slo-scale", type=float, default=1.0)
     ap.add_argument("--reschedule-cooldown", type=float, default=0.5)
+    ap.add_argument("--routing", default="solver",
+                    choices=["solver", "slice"],
+                    help="group placement policy (core/routing.py)")
     ap.add_argument("--max-wall", type=float, default=120.0,
                     help="wall-clock bound; past it outstanding requests "
                          "are cancelled and the server shuts down cleanly")

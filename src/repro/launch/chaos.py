@@ -30,7 +30,7 @@ contract:
     (cross-engine snapshot migration);
   * ``combined`` — hang one engine + crash another + replacement +
     ≥1 migration, outputs byte-identical to a no-fault baseline
-    (the ISSUE-9 acceptance scenario; run with ``--instances 3``);
+    (the ISSUE-9 acceptance scenario; defaults to 3 instances);
   * ``none`` — fault-free baseline (used for output-identity checks).
 
 ``--plan-file`` overrides the scenario's fault schedule with a JSON
@@ -88,11 +88,21 @@ class VirtualClock:
         return self.t
 
 
-def _hw(max_new: int) -> HardwareProfile:
+def _hw(max_new: int, tier: Optional[int] = None) -> HardwareProfile:
     # static profile (no calibration pass): the soak measures recovery
-    # behavior, not scheduling quality, and static costs keep it seeded
-    return HardwareProfile(prefill_time=0.05, decode_per_token=0.02,
-                           inefficiency=1.2, token_capacity=512,
+    # behavior, not scheduling quality, and static costs keep it seeded.
+    # --hetero assigns instance i the fast/mid/slow tier (i % 3) so the
+    # scheduler's drain/swap estimates differ per instance.  The spread
+    # is deliberately mild (2x end to end): every staged fault needs its
+    # target engine to carry real work (a starved engine neither stalls
+    # visibly, nor decodes enough to reach its crash occurrence, nor
+    # holds sharers to migrate on drain), and a steeper spread lets the
+    # solver serve the whole soak workload from the fastest tier alone.
+    scale = 1.0 if tier is None else (0.75, 1.0, 1.5)[tier % 3]
+    return HardwareProfile(prefill_time=0.05 * scale,
+                           decode_per_token=0.02 * scale,
+                           inefficiency=1.2,
+                           token_capacity=int(512 / scale),
                            swap_time=0.2, model_max_tokens=max(64, max_new))
 
 
@@ -122,11 +132,17 @@ def default_plan(args) -> FaultPlan:
 
 def build_cluster(args, plan: FaultPlan):
     import jax
+    import time as _time
     cfg = get_arch(args.arch).reduced(num_layers=1, d_model=64)
     model = build_model(cfg)
     params = model.init(jax.random.key(args.seed))
     registry = {args.arch: (model, params)}
-    clock = VirtualClock()
+    threaded = bool(getattr(args, "threaded", False))
+    hetero = bool(getattr(args, "hetero", False))
+    # threaded mode runs on real wall time (concurrent rounds cannot share
+    # a manually-advanced clock); the seeded round-robin loop keeps the
+    # virtual clock so timelines replay bit-for-bit
+    clock = _time.monotonic if threaded else VirtualClock()
     ecfg = EngineConfig(max_slots=args.slots, max_seq_len=128, block_size=8,
                         attention_backend="paged-xla", prefix_sharing=True)
 
@@ -143,16 +159,22 @@ def build_cluster(args, plan: FaultPlan):
         vq = VirtualQueue(i)
         agents.append(QLMAgent(eng, vq, registry))
         engines.append(eng)
-        infos.append(InstanceInfo(i, {args.arch: _hw(args.max_new_tokens)},
-                                  args.arch, vq))
+        hw = _hw(args.max_new_tokens, tier=i if hetero else None)
+        infos.append(InstanceInfo(i, {args.arch: hw}, args.arch, vq))
     scenario = getattr(args, "scenario", "kill")
     grace = getattr(args, "hang_grace", None)
     if grace is None and scenario in ("hang", "combined"):
-        grace = 3.0
+        # threaded rounds run on wall time, where a first-shape XLA
+        # compile stalls a HEALTHY busy engine for several seconds — a
+        # pause the virtual clock never sees.  The wider grace keeps the
+        # watchdog from false-killing a compiling engine while still
+        # catching the injected hang well inside the soak wall budget.
+        grace = 10.0 if threaded else 3.0
     controller = QLMController(infos, QLMConfig(
         avg_batch_size=args.slots, reschedule_cooldown=0.5,
         retry_budget=args.retry_budget, backoff_base_s=0.05,
-        backoff_cap_s=1.0, hang_grace_rounds=grace))
+        backoff_cap_s=1.0, hang_grace_rounds=grace,
+        routing=getattr(args, "routing", "solver")))
     controller.attach_engines(engines)
     return clock, engines, agents, controller, make_engine, registry
 
@@ -184,8 +206,16 @@ def _terminal(r) -> bool:
 
 
 def run_soak(args, plan: Optional[FaultPlan] = None) -> dict:
-    """One seeded soak run.  Returns the stats dict (pure data — the
-    CLI's assertions live in main() so tests can call this directly)."""
+    """One soak run.  Returns the stats dict (pure data — the CLI's
+    assertions live in main() so tests can call this directly).
+    Dispatches to the threaded wall-clock loop under --threaded."""
+    if getattr(args, "threaded", False):
+        return run_soak_threaded(args, plan)
+    return _run_soak_round_robin(args, plan)
+
+
+def _run_soak_round_robin(args, plan: Optional[FaultPlan] = None) -> dict:
+    """The seeded virtual-clock round-robin loop (replayable timelines)."""
     plan = default_plan(args) if plan is None else plan
     scenario = getattr(args, "scenario", "kill")
     clock, engines, agents, controller, make_engine, registry = \
@@ -263,7 +293,171 @@ def run_soak(args, plan: Optional[FaultPlan] = None) -> dict:
                 and not any(h.state == "draining" for h in controller.health):
             break
 
-    now = clock()
+    return _finalize(args, plan, clock(), controller, engines, retired,
+                     reqs, rounds, failures, supervision)
+
+
+def run_soak_threaded(args, plan: Optional[FaultPlan] = None) -> dict:
+    """Thread-per-engine soak: same fault schedule, real wall-clock
+    concurrency (``serving.cluster.ThreadedCluster``).
+
+    Occurrence-counted faults still fire deterministically PER ENGINE
+    (each engine's round/decode counters are thread-local sequences), but
+    cross-engine event ordering and timestamps are wall-clock — so the
+    lifecycle triggers are work-based here (drain when the target is
+    busy, wall-time fallback) instead of round-indexed, and
+    ``--replay-check`` is a round-robin-only contract.
+    """
+    import time as _time
+    from repro.serving import ThreadedCluster
+
+    plan = default_plan(args) if plan is None else plan
+    scenario = getattr(args, "scenario", "kill")
+    if args.no_supervision:
+        raise SystemExit("--no-supervision is a round-robin-only harness "
+                         "mode (the threaded loop IS the supervision)")
+    clock, engines, agents, controller, make_engine, registry = \
+        build_cluster(args, plan)
+    reqs = build_requests(args)
+    t0 = _time.monotonic()
+    for r in reqs:
+        r.arrival_time += t0          # virtual offsets -> wall schedule
+    pending = list(reqs)
+
+    policy = None
+    if scenario in ("kill-replace", "combined"):
+        policy = ReplacementPolicy(
+            cooldown_s=getattr(args, "replace_cooldown", 0.5))
+    # drain target: an explicit --drain-engine pins it; otherwise the
+    # threaded loop picks DYNAMICALLY — the first engine observed holding
+    # residents when the drain is due.  Wall-clock placement is not
+    # replayable, so a fixed index routinely names an engine the solver
+    # happens to starve (e.g. the slow hetero tier), and an evicting
+    # drain on an empty engine migrates nothing.
+    drain_engine = getattr(args, "drain_engine", None)
+    drain_evict = bool(getattr(args, "drain_evict", False)) \
+        or scenario in ("migrate", "combined")
+    drains_scenario = scenario in ("drain", "migrate", "combined")
+    drained_fired = False
+    retired: List[tuple] = []
+    next_engine_id = args.instances
+    max_wall = getattr(args, "max_wall", 60.0)
+    deadline = t0 + max_wall
+
+    # sustain traffic THROUGH the drain: hold the tail of the workload
+    # back until the drain is armed so the evicted/pinned state has live
+    # siblings to migrate toward (released unconditionally at 0.4·wall so
+    # a never-arming drain cannot strand them)
+    holdback: List = []
+    if drains_scenario:
+        k = max(1, len(pending) // 4)
+        holdback, pending = pending[-k:], pending[:-k]
+
+    cluster = ThreadedCluster(controller, agents, engines)
+
+    def _drain_armed() -> bool:
+        """combined stages its phases: the drain waits until the hang has
+        been detected AND the crash has fired, so the drain cannot land
+        on (and retire) an engine whose staged fault hasn't hit yet."""
+        if scenario != "combined":
+            return True
+        return controller.hangs >= 1 and sum(cluster.failures) >= 1
+
+    # round-granular drain trigger, run on each agent's OWN thread
+    # between rounds: a 10ms polling loop reliably misses the instants
+    # when an engine holds residents, but between-rounds observation
+    # cannot.  An evicting drain wants >= 2 co-residents (pins — and thus
+    # pinned-snapshot migration — only exist while sharers overlap).
+    need_busy = 2 if drain_evict else 1
+
+    def _drain_hook(idx: int) -> None:
+        nonlocal drained_fired, drain_engine
+        if drained_fired or not _drain_armed():
+            return
+        if drain_engine is not None and idx != drain_engine:
+            return
+        eng = cluster.engines[idx]
+        with eng.lock:   # own agent thread, between rounds: free
+            if getattr(eng, "num_active", lambda: 0)() < need_busy:
+                return
+            if drain_evict:
+                # only sequences whose leading blocks are SHARED
+                # (refcount > 1) leave pinned snapshots behind on evict;
+                # two non-sharing residents (e.g. both resumed from
+                # snapshots) would drain without exercising migration
+                bm = getattr(eng, "block_mgr", None)
+                if bm is None or not any(bm.shared_prefix_len(sid) > 0
+                                         for sid in list(bm._seqs)):
+                    return
+            with controller.lock:
+                if drained_fired or not controller.is_schedulable(idx):
+                    return
+                controller.drain_instance(
+                    idx, _time.monotonic(), evict=drain_evict,
+                    cause=f"chaos scenario={scenario} (threaded)")
+                drained_fired = True
+                drain_engine = idx
+
+    if drains_scenario:
+        cluster.round_hook = _drain_hook
+    cluster.start()
+    try:
+        while _time.monotonic() < deadline:
+            now = _time.monotonic()
+            if holdback and (_drain_armed() or drained_fired
+                             or now - t0 > 0.4 * max_wall):
+                for r in holdback:
+                    # re-anchor deadlines: the tranche was gated by the
+                    # harness, not queued, so its SLO clock starts now
+                    r.arrival_time = max(r.arrival_time, now)
+                pending.extend(holdback)
+                holdback = []
+            while pending and pending[0].arrival_time <= now:
+                controller.submit(pending.pop(0), now)
+            if (drains_scenario and not drained_fired
+                    and now - t0 > 0.5 * max_wall):
+                # wall fallback so a starved cluster still drains before
+                # the loop gives up (the round hook is the real trigger)
+                cands = [drain_engine] if drain_engine is not None \
+                    else list(range(len(cluster.engines)))
+                for idx in cands:
+                    if controller.is_schedulable(idx):
+                        controller.drain_instance(
+                            idx, now, evict=drain_evict,
+                            cause=f"chaos scenario={scenario} "
+                                  f"(threaded, fallback)")
+                        drained_fired = True
+                        drain_engine = idx
+                        break
+            if policy is not None:
+                with controller.lock:
+                    due = policy.replacements_due(controller, now)
+                for idx in due:
+                    eng = make_engine(next_engine_id)
+                    next_engine_id += 1
+                    retired.append((idx, cluster.engines[idx]))
+                    cluster.replace(
+                        idx, eng,
+                        QLMAgent(eng,
+                                 controller.instances[idx].virtual_queue,
+                                 registry), now)
+            if not pending and not holdback \
+                    and all(_terminal(r) for r in reqs) \
+                    and not any(h.state == "draining"
+                                for h in controller.health):
+                break
+            _time.sleep(0.01)
+    finally:
+        cluster.stop()
+    return _finalize(args, plan, _time.monotonic(), controller,
+                     cluster.engines, retired, reqs, sum(cluster.rounds),
+                     sum(cluster.failures), supervision=True)
+
+
+def _finalize(args, plan, now, controller, engines, retired, reqs,
+              rounds, failures, supervision) -> dict:
+    """End-state invariants + the stats dict (shared by both loops)."""
+    scenario = getattr(args, "scenario", "kill")
     controller.gc_groups()
     # end-state invariants (always on here, env var or not): conservation
     # must hold on EVERY pool — the dead engine's accounting was salvaged
@@ -297,6 +491,9 @@ def run_soak(args, plan: Optional[FaultPlan] = None) -> dict:
         "seed": args.seed,
         "scenario": scenario,
         "supervision": supervision,
+        "threaded": bool(getattr(args, "threaded", False)),
+        "hetero": bool(getattr(args, "hetero", False)),
+        "routing": controller.cfg.routing,
         "rounds": rounds,
         "requests": len(reqs),
         "served": sum(1 for r in reqs if r.finished() and not r.failed
@@ -330,7 +527,9 @@ def run_soak(args, plan: Optional[FaultPlan] = None) -> dict:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--arch", default="granite-3-2b")
-    ap.add_argument("--instances", type=int, default=2)
+    ap.add_argument("--instances", type=int, default=None,
+                    help="engine count (default 2; 3 for combined, which "
+                         "stages faults on three distinct engines)")
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--rate", type=float, default=8.0)
     ap.add_argument("--max-new-tokens", type=int, default=12)
@@ -339,8 +538,7 @@ def main(argv=None) -> int:
     ap.add_argument("--scenario", default="kill",
                     choices=["kill", "hang", "drain", "kill-replace",
                              "migrate", "combined", "none"],
-                    help="lifecycle under test (see module docstring); "
-                         "combined wants --instances 3")
+                    help="lifecycle under test (see module docstring)")
     ap.add_argument("--plan-file", dest="plan_file", default=None,
                     help="JSON FaultPlan overriding the scenario's fault "
                          "schedule (FaultPlan.from_json)")
@@ -360,10 +558,14 @@ def main(argv=None) -> int:
                     help="hang at the Nth round occurrence on --hang-engine")
     ap.add_argument("--hang-grace", type=float, default=None,
                     help="watchdog grace in calibrated round deadlines "
-                         "(default: 3.0 for hang scenarios, else off)")
+                         "(default for hang scenarios: 3.0, or 10.0 "
+                         "threaded — wall-clock XLA compiles stall "
+                         "healthy engines; else off)")
     ap.add_argument("--drain-engine", type=int, default=None,
                     help="instance drained by drain/migrate/combined "
-                         "(default: 0, or the last instance for combined)")
+                         "(round-robin default: 0, or the last instance "
+                         "for combined; threaded default: dynamic — the "
+                         "first engine observed holding residents)")
     ap.add_argument("--drain-at-round", type=int, default=None,
                     help="round at which the drain LSO fires (default 40, "
                          "or 16 for migrate/combined so sharers are still "
@@ -381,6 +583,18 @@ def main(argv=None) -> int:
     ap.add_argument("--round-dt", type=float, default=0.05,
                     help="virtual seconds per round")
     ap.add_argument("--max-rounds", type=int, default=3000)
+    ap.add_argument("--threaded", action="store_true",
+                    help="thread-per-engine wall-clock loop "
+                         "(ThreadedCluster) instead of the seeded "
+                         "virtual-clock round-robin")
+    ap.add_argument("--hetero", action="store_true",
+                    help="heterogeneous static profiles: instance i gets "
+                         "the fast/mid/slow tier (i %% 3)")
+    ap.add_argument("--routing", default="solver",
+                    choices=["solver", "slice"],
+                    help="group placement policy (core/routing.py)")
+    ap.add_argument("--max-wall", type=float, default=60.0,
+                    help="wall-clock bound for the threaded loop")
     ap.add_argument("--attainment-floor", type=float, default=0.5,
                     help="minimum interactive attainment despite the kill")
     ap.add_argument("--no-supervision", action="store_true",
@@ -393,6 +607,11 @@ def main(argv=None) -> int:
     ap.add_argument("--timeline", default=None,
                     help="write the fault timeline JSON")
     args = ap.parse_args(argv)
+    if args.instances is None:
+        args.instances = 3 if args.scenario == "combined" else 2
+    if args.threaded and args.replay_check:
+        ap.error("--replay-check needs the seeded round-robin loop "
+                 "(threaded wall-clock ordering is not replayable)")
 
     stats = run_soak(args)
     scenario = args.scenario

@@ -6,10 +6,30 @@ Poisson workload, and prints SLO attainment / throughput.
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
       --requests 40 --rate 2.0
+
+Cluster-mode flags (docs/cluster.md):
+
+  --threaded          thread-per-engine serve loop (ThreadedCluster):
+                      engines run real concurrent wall-clock rounds
+                      instead of the single-thread round-robin poll
+  --hetero            heterogeneous capacity tiers — instance i gets the
+                      fast/mid/slow EngineConfig tier (slots x2/x1/x0.5,
+                      decode_burst 4/2/1), each tier calibrated on its
+                      own throwaway engine so the scheduler sees REAL
+                      per-tier drain/swap costs; params are placed
+                      through distributed/sharding.py rules
+  --routing P         solver | slice — group-level MILP placement vs
+                      slice-level load balancing (core/routing.py)
+  --compare-drivers   run threaded AND round-robin on the same seed,
+                      report both (tokens/s head-to-head)
+  --compare-routing   run slice AND solver routing on the same seed,
+                      report both (attainment head-to-head)
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
 import time
 
 import jax
@@ -21,8 +41,9 @@ from repro.core.lso import QLMAgent
 from repro.core.qlm import QLMConfig, QLMController
 from repro.core.request import make_request
 from repro.core.virtual_queue import VirtualQueue
+from repro.distributed.sharding import ShardingRules, build_shardings
 from repro.models import build_model
-from repro.serving import ContinuousBatchingEngine, EngineConfig
+from repro.serving import ContinuousBatchingEngine, EngineConfig, ThreadedCluster
 from repro.sim.profiles import calibrate_from_engine
 
 
@@ -34,6 +55,43 @@ def build_registry(arch_names, key):
         model = build_model(cfg)
         registry[name] = (model, model.init(key))
     return registry
+
+
+def shard_registry(registry):
+    """Place every model's params through the TP sharding rules.
+
+    On this CPU driver the mesh is one device, so every leaf lands
+    replicated — but the placement goes through the same
+    ``build_shardings`` path a multi-device mesh would use, so the
+    DEFAULT_RULES TP split (ff / heads over the "model" axis) applies
+    unchanged when real devices are present.
+    """
+    from jax.sharding import Mesh
+    devs = np.asarray(jax.devices()[:1])
+    mesh = Mesh(devs, ("model",))
+    rules = ShardingRules.default()
+    out = {}
+    for name, (model, params) in registry.items():
+        sh = build_shardings(mesh, params, model.param_axes(), rules)
+        out[name] = (model, jax.device_put(params, sh))
+    return out
+
+
+# fast / mid / slow capacity tiers for --hetero (instance i -> tier i%3):
+# more slots = bigger batches = higher throughput; wider decode_burst =
+# fewer host round-trips per token.  The tiers are calibrated separately,
+# so the RWT estimator sees genuinely different drain/swap costs.
+HETERO_TIERS = ({"slots_scale": 2.0, "decode_burst": 4},
+                {"slots_scale": 1.0, "decode_burst": 2},
+                {"slots_scale": 0.5, "decode_burst": 1})
+
+
+def hetero_engine_cfg(base: EngineConfig, idx: int) -> EngineConfig:
+    tier = HETERO_TIERS[idx % len(HETERO_TIERS)]
+    return dataclasses.replace(
+        base,
+        max_slots=max(2, int(round(base.max_slots * tier["slots_scale"]))),
+        decode_burst=tier["decode_burst"])
 
 
 def calibrate_registry(registry, ecfg: EngineConfig) -> dict:
@@ -49,6 +107,56 @@ def calibrate_registry(registry, ecfg: EngineConfig) -> dict:
         hw_by_model[name] = calibrate_from_engine(
             eng, token_capacity=ecfg.resolved_kv_blocks() * ecfg.block_size)
     return hw_by_model
+
+
+def build_cluster(args, registry, arch_names):
+    """Engines + agents + controller honoring --hetero and --routing.
+
+    Homogeneous: one calibration shared by every instance.  Hetero: one
+    calibration per TIER (distinct EngineConfig), so each InstanceInfo
+    carries its own per-model profiles and the scheduler's placement is
+    heterogeneity-aware.
+    """
+    debug_inv = bool(getattr(args, "debug_invariants", False))
+    base = EngineConfig(max_slots=args.slots, max_seq_len=128,
+                        decode_burst=args.decode_burst,
+                        attention_backend=args.backend,
+                        prefix_sharing=args.prefix_sharing,
+                        debug_invariants=debug_inv)
+    ecfgs = [hetero_engine_cfg(base, i) if args.hetero else base
+             for i in range(args.instances)]
+    hw_cache = {}
+    engines, agents, infos = [], [], []
+    for i, ecfg in enumerate(ecfgs):
+        key = (ecfg.max_slots, ecfg.decode_burst)
+        if key not in hw_cache:
+            hw_cache[key] = calibrate_registry(registry, ecfg)
+        m0, p0 = registry[arch_names[0]]
+        eng = ContinuousBatchingEngine(m0, p0, ecfg, model_name=arch_names[0])
+        vq = VirtualQueue(i)
+        agents.append(QLMAgent(eng, vq, registry))
+        engines.append(eng)
+        infos.append(InstanceInfo(i, dict(hw_cache[key]), eng.model_name, vq))
+    controller = QLMController(infos, QLMConfig(
+        avg_batch_size=args.slots,
+        routing=getattr(args, "routing", "solver"),
+        debug_invariants=debug_inv))
+    controller.attach_engines(engines)
+    return engines, agents, infos, controller
+
+
+def build_workload(args, arch_names, t_start: float):
+    rng = np.random.default_rng(args.seed)
+    classes = ["interactive", "batch1", "batch2"]
+    arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
+    reqs = []
+    for i in range(args.requests):
+        prompt = rng.integers(0, 100, size=int(rng.integers(4, 24))).tolist()
+        r = make_request(prompt, rng.choice(arch_names), rng.choice(classes),
+                         arrival_time=t_start + arrivals[i],
+                         max_new_tokens=args.max_new_tokens)
+        reqs.append(r)
+    return reqs
 
 
 def summarize(reqs, controller, engines, t_start: float, now: float) -> dict:
@@ -72,6 +180,7 @@ def summarize(reqs, controller, engines, t_start: float, now: float) -> dict:
     met = sum(1 for r in served if r.slo_met())
     done_times = [r.completion_time for r in reqs if r.completion_time]
     span = max(max(done_times, default=now) - t_start, 1e-9)
+    tokens = sum(e.stats.tokens_generated for e in engines)
     return {
         "requests": len(reqs),
         "served": len(served),
@@ -99,11 +208,75 @@ def summarize(reqs, controller, engines, t_start: float, now: float) -> dict:
         "throughput_rps": len(served) / span,
         "evictions": sum(e.stats.evictions for e in engines),
         "swaps": sum(e.stats.model_swaps for e in engines),
-        "tokens": sum(e.stats.tokens_generated for e in engines),
+        "tokens": tokens,
+        "tokens_per_s": tokens / span,
         "prefix_hits": sum(e.stats.prefix_hits for e in engines),
         "prefix_shared_tokens": sum(e.stats.prefix_shared_tokens
                                     for e in engines),
     }
+
+
+def _terminal(r) -> bool:
+    return r.finished() or r.dropped()
+
+
+def run_round_robin(args, registry, arch_names) -> dict:
+    """Single-thread polling loop: one virtual "round" interleaves every
+    engine in turn (the baseline --threaded is compared against)."""
+    engines, agents, infos, controller = build_cluster(args, registry,
+                                                       arch_names)
+    t_start = time.monotonic()
+    reqs = build_workload(args, arch_names, t_start)
+    pending = list(reqs)
+    deadline = t_start + args.max_wall
+    while not all(_terminal(r) for r in reqs):
+        now = time.monotonic()
+        if now > deadline:
+            break
+        while pending and pending[0].arrival_time <= now:
+            controller.submit(pending.pop(0), now)
+        for inst, eng, agent in zip(infos, engines, agents):
+            inst.current_model = eng.model_name
+            agent.run_iteration()
+        controller.tick(time.monotonic())
+        if not any(e.num_active() for e in engines) and pending:
+            time.sleep(min(0.01, max(0.0,
+                                     pending[0].arrival_time - now)))
+    stats = summarize(reqs, controller, engines, t_start, time.monotonic())
+    stats["driver"] = "round-robin"
+    stats["routing"] = controller.cfg.routing
+    return stats
+
+
+def run_threaded(args, registry, arch_names) -> dict:
+    """Thread-per-engine loop: the main thread plays open-loop client
+    (submitting on the wall-clock arrival schedule) while every engine
+    decodes concurrently and the controller ticks on its own thread."""
+    engines, agents, infos, controller = build_cluster(args, registry,
+                                                       arch_names)
+    cluster = ThreadedCluster(controller, agents, engines)
+    t_start = time.monotonic()
+    reqs = build_workload(args, arch_names, t_start)
+    cluster.start()
+    try:
+        for r in reqs:
+            time.sleep(max(0.0, r.arrival_time - time.monotonic()))
+            controller.submit(r, time.monotonic())
+        cluster.wait(lambda: all(_terminal(r) for r in reqs),
+                     timeout=args.max_wall)
+    finally:
+        cluster.stop()
+    stats = summarize(reqs, controller, engines, t_start, time.monotonic())
+    stats["driver"] = "threaded"
+    stats["routing"] = controller.cfg.routing
+    stats["engine_rounds"] = list(cluster.rounds)
+    stats["controller_ticks"] = cluster.ticks
+    return stats
+
+
+def run_once(args, registry, arch_names) -> dict:
+    run = run_threaded if args.threaded else run_round_robin
+    return run(args, registry, arch_names)
 
 
 def main(argv=None) -> dict:
@@ -131,66 +304,69 @@ def main(argv=None) -> dict:
                          "backends (--no-prefix-sharing for the A/B "
                          "baseline; inert on dense backends)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--threaded", action="store_true",
+                    help="thread-per-engine serve loop (ThreadedCluster)")
+    ap.add_argument("--hetero", action="store_true",
+                    help="heterogeneous capacity tiers (fast/mid/slow), "
+                         "each calibrated separately; params placed via "
+                         "distributed/sharding.py")
+    ap.add_argument("--routing", default="solver",
+                    choices=["solver", "slice"],
+                    help="group placement policy (core/routing.py)")
+    ap.add_argument("--debug-invariants", action="store_true",
+                    help="run the engine/queue invariant checkers every "
+                         "round/tick")
+    ap.add_argument("--max-wall", type=float, default=180.0,
+                    help="wall-clock bound per run")
+    ap.add_argument("--compare-drivers", action="store_true",
+                    help="run threaded AND round-robin same-seed")
+    ap.add_argument("--compare-routing", action="store_true",
+                    help="run slice AND solver routing same-seed")
+    ap.add_argument("--json", default=None, help="write final stats JSON")
     args = ap.parse_args(argv)
 
-    rng = np.random.default_rng(args.seed)
     key = jax.random.key(args.seed)
 
     # model registry (reduced configs — same code path as production)
     arch_names = [args.arch] + ([args.arch2] if args.arch2 else [])
     registry = build_registry(arch_names, key)
+    if args.hetero:
+        registry = shard_registry(registry)
 
-    engines, agents, infos = [], [], []
-    ecfg = EngineConfig(max_slots=args.slots, max_seq_len=128,
-                        decode_burst=args.decode_burst,
-                        attention_backend=args.backend,
-                        prefix_sharing=args.prefix_sharing)
-    # per-model hardware profiles (each arch calibrated on its own engine):
-    # the scheduler's swap/drain costs for --arch2 come from arch2's real
-    # timings, not a copy of arch-1's
-    hw_by_model = calibrate_registry(registry, ecfg)
-    for i in range(args.instances):
-        m0, p0 = registry[arch_names[0]]
-        eng = ContinuousBatchingEngine(m0, p0, ecfg, model_name=arch_names[0])
-        vq = VirtualQueue(i)
-        agent = QLMAgent(eng, vq, registry)
-        engines.append(eng)
-        agents.append(agent)
-        infos.append(InstanceInfo(i, dict(hw_by_model), eng.model_name, vq))
-    controller = QLMController(infos, QLMConfig(avg_batch_size=args.slots))
+    out = {}
+    if args.compare_drivers:
+        for threaded in (True, False):
+            a = argparse.Namespace(**vars(args))
+            a.threaded = threaded
+            out["threaded" if threaded else "round-robin"] = \
+                run_once(a, registry, arch_names)
+    elif args.compare_routing:
+        for routing in ("slice", "solver"):
+            a = argparse.Namespace(**vars(args))
+            a.routing = routing
+            out[routing] = run_once(a, registry, arch_names)
+    else:
+        out["run"] = run_once(args, registry, arch_names)
 
-    # workload
-    classes = ["interactive", "batch1", "batch2"]
-    t_start = time.monotonic()
-    arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
-    reqs = []
-    for i in range(args.requests):
-        prompt = rng.integers(0, 100, size=int(rng.integers(4, 24))).tolist()
-        r = make_request(prompt, rng.choice(arch_names), rng.choice(classes),
-                         arrival_time=t_start + arrivals[i],
-                         max_new_tokens=args.max_new_tokens)
-        reqs.append(r)
-
-    pending = list(reqs)
-    done = 0
-    while done < len(reqs):
-        now = time.monotonic()
-        while pending and pending[0].arrival_time <= now:
-            r = pending.pop(0)
-            for inst, eng in zip(infos, engines):
-                inst.current_model = eng.model_name
-            controller.submit(r, now)
-        for inst, eng, agent in zip(infos, engines, agents):
-            inst.current_model = eng.model_name
-            agent.run_iteration()
-        done = sum(1 for r in reqs if r.finished())
-        if not any(e.num_active() for e in engines) and pending:
-            time.sleep(min(0.01, max(0.0, pending[0].arrival_time - time.monotonic())))
-
-    stats = summarize(reqs, controller, engines, t_start, time.monotonic())
-    for k, v in stats.items():
-        print(f"{k:18s} {v:.3f}" if isinstance(v, float) else f"{k:18s} {v}")
-    return stats
+    for name, st in out.items():
+        if len(out) > 1:
+            print(f"--- {name} ---")
+        for k, v in st.items():
+            print(f"{k:18s} {v:.3f}" if isinstance(v, float)
+                  else f"{k:18s} {v}")
+    if args.compare_drivers:
+        t, rr = out["threaded"]["tokens_per_s"], \
+            out["round-robin"]["tokens_per_s"]
+        print(f"tokens/s           threaded {t:.1f} vs round-robin {rr:.1f} "
+              f"({t / max(rr, 1e-9):.2f}x)")
+    if args.compare_routing:
+        print(f"attainment         slice "
+              f"{out['slice']['slo_attainment']:.3f} vs solver "
+              f"{out['solver']['slo_attainment']:.3f}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2)
+    return out["run"] if "run" in out else out
 
 
 if __name__ == "__main__":

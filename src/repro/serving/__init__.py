@@ -1,3 +1,4 @@
+from repro.serving.cluster import ThreadedCluster
 from repro.serving.engine import ContinuousBatchingEngine, EngineConfig, EngineStats
 from repro.serving.faults import (EngineCrashed, EngineDead, EngineFailure,
                                   FaultPlan, FaultSpec, FaultyEngine,
@@ -9,6 +10,6 @@ from repro.serving.kv_cache import BlockManager, OutOfBlocksError
 __all__ = ["ContinuousBatchingEngine", "EngineConfig", "EngineStats",
            "BlockManager", "OutOfBlocksError",
            "AsyncServer", "FrontendConfig", "FrontendStats", "RequestStream",
-           "run_session",
+           "run_session", "ThreadedCluster",
            "EngineFailure", "EngineCrashed", "EngineDead",
            "TransientEngineError", "FaultSpec", "FaultPlan", "FaultyEngine"]

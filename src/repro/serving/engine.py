@@ -110,6 +110,7 @@ front end's hooks, ``serving.frontend``):
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -250,7 +251,22 @@ class ContinuousBatchingEngine:
                 f"attention_backend must be one of {ATTENTION_BACKENDS} "
                 f"or None, got {cfg.attention_backend!r}")
         self.cfg = cfg
+        # Two explicit time bases.  ``self.clock`` stamps the REQUEST
+        # LIFECYCLE (first_token_time, completion_time, redelivery
+        # backoff gates) so virtual-clock drivers own the schedule;
+        # ``self._wall`` is ALWAYS real wall time and feeds the
+        # calibration stats (prefill_time / decode_time / swap_time),
+        # which measure actual compute even when the lifecycle clock is
+        # simulated.  Timed regions must never mix the two.
         self.clock = clock
+        self._wall = time.monotonic
+        # Serializes engine-internal state (slots, page pool, snapshots)
+        # between the agent thread's rounds and cross-thread LSOs
+        # (migration_sweep materialize, drain eviction).  The controller
+        # only ever acquires it NON-blocking while holding its own lock
+        # (see core/qlm.py), so lock order engine -> controller is the
+        # one that may block and no cycle exists.
+        self.lock = threading.RLock()
         self.paged = cfg.paged
         # sharing needs a physical page pool: inert on the dense layouts
         self.prefix_sharing = bool(cfg.prefix_sharing) and self.paged
@@ -695,7 +711,7 @@ class ContinuousBatchingEngine:
         slot = self._free_slot()
         if slot is None or not self.can_admit(req):
             return False
-        t0 = time.monotonic()
+        t0 = self._wall()
         ex = extras or req.extras or {}
         my_layout = "paged" if self.paged else "dense"
         if req.snapshot is not None \
@@ -832,7 +848,7 @@ class ContinuousBatchingEngine:
             n0 = len(self._admit_completed)
             self._finish_if_done(slot, tok, now, self._admit_completed)
             self.completed.extend(self._admit_completed[n0:])
-        self.stats.prefill_time += time.monotonic() - t0
+        self.stats.prefill_time += self._wall() - t0
         return True
 
     # ------------------------------------------------------------------
@@ -1087,7 +1103,7 @@ class ContinuousBatchingEngine:
     # model swapping LSO
     # ------------------------------------------------------------------
     def swap_model(self, model: Model, params, model_name: str) -> List[Request]:
-        t0 = time.monotonic()
+        t0 = self._wall()
         evicted = self.flush()
         # swapped-out requests' snapshots belong to the OLD model: drop them
         # (their KV is meaningless under the new weights; discard releases
@@ -1110,7 +1126,7 @@ class ContinuousBatchingEngine:
         self.block_mgr.reset()
         self._jit_compute()
         self.stats.model_swaps += 1
-        self.stats.swap_time += time.monotonic() - t0
+        self.stats.swap_time += self._wall() - t0
         return evicted
 
     # ------------------------------------------------------------------
@@ -1152,7 +1168,7 @@ class ContinuousBatchingEngine:
         work = self.prefilling_slots()
         if not work:
             return
-        t0 = time.monotonic()
+        t0 = self._wall()
         C = self._chunk_quantum()
         chunks: Dict[int, Tuple[np.ndarray, int, bool]] = {}
         for i in work:
@@ -1222,13 +1238,13 @@ class ContinuousBatchingEngine:
                 req.generated += 1
                 self.stats.prefills += 1
                 self._finish_if_done(i, tok, now, done)
-        self.stats.prefill_time += time.monotonic() - t0
+        self.stats.prefill_time += self._wall() - t0
 
     def _decode_round(self, done: List[Request]) -> None:
         active = self.decode_slots()
         if not active:
             return
-        t0 = time.monotonic()
+        t0 = self._wall()
         # pending COW copies (previous round's append_token, fork_slot)
         # must land before this dispatch writes the destination pages
         self._apply_cow()
@@ -1250,7 +1266,7 @@ class ContinuousBatchingEngine:
         jax.block_until_ready(self.cache)  # qlint: disable=host-sync-in-hot-path -- documented timed-region sync: one per decode round, feeds decode_time / RWT
         next_tokens = np.asarray(next_tokens)  # qlint: disable=host-sync-in-hot-path -- the round's single device->host result copy, inside the timed region
         self.stats.decode_iterations += 1
-        self.stats.decode_time += time.monotonic() - t0
+        self.stats.decode_time += self._wall() - t0
 
         now = self.clock()
         for i in active:
@@ -1337,7 +1353,7 @@ class ContinuousBatchingEngine:
             # OOM preemption ordering
             self._decode_round(done)
             return
-        t0 = time.monotonic()
+        t0 = self._wall()
         # COW copies from _plan_burst's extends (and any earlier fork /
         # append) must land before the fused loop writes those pages
         self._apply_cow()
@@ -1359,7 +1375,7 @@ class ContinuousBatchingEngine:
         out = np.asarray(out)  # qlint: disable=host-sync-in-hot-path -- the burst's single device->host result copy, inside the timed region
         executed = int((out >= 0).any(axis=1).sum())
         self.stats.decode_iterations += executed
-        self.stats.decode_time += time.monotonic() - t0
+        self.stats.decode_time += self._wall() - t0
 
         now = self.clock()
         for i in active:

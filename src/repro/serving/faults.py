@@ -28,7 +28,10 @@ Fault kinds: ``crash`` marks the engine dead and raises
 ``EngineCrashed`` — every later call raises ``EngineDead`` (a crashed
 host does not come back); ``error`` raises ``TransientEngineError``
 without killing the engine (the supervision layer's strike counter
-decides); ``delay`` sleeps ``delay_s`` (degraded, not failed); ``hang``
+decides); ``delay`` stalls this engine's rounds for ``delay_s`` on the
+engine's injected clock (degraded, not failed — no ``time.sleep``, so a
+virtual-clock driver keeps advancing and sibling engines keep serving);
+``hang``
 wedges the engine WITHOUT raising — every later round consumes its
 quantum and makes zero progress (no tokens, no completions, no
 exception), which is invisible to success-only heartbeats and exactly
@@ -44,7 +47,6 @@ from __future__ import annotations
 import dataclasses
 import json
 import random
-import time
 from typing import Any, Dict, List, Optional, Tuple
 
 FAULT_SITES = ("decode", "prefill", "swap", "materialize", "round")
@@ -173,7 +175,7 @@ class FaultPlan:
 # wrapped engine (both get and set — the agent assigns
 # ``engine.pull_source`` through the wrapper).
 _OWN_FIELDS = ("_engine", "_plan", "engine_id", "dead", "hung",
-               "_inner_materialize")
+               "stalled_until", "_inner_materialize")
 
 
 class FaultyEngine:
@@ -191,6 +193,13 @@ class FaultyEngine:
         object.__setattr__(self, "engine_id", engine_id)
         object.__setattr__(self, "dead", False)
         object.__setattr__(self, "hung", False)
+        # delay faults stall rounds until this point on the ENGINE's
+        # injected clock — never a raw time.sleep, which under the chaos
+        # soak's shared virtual clock would block the whole round-robin
+        # loop (every engine) without ever advancing the simulated
+        # schedule.  Clock-gated, only this engine's rounds go empty;
+        # under a threaded wall-clock loop only this agent thread idles.
+        object.__setattr__(self, "stalled_until", 0.0)
         # the materialize site lives INSIDE engine paths (swap_model, the
         # admit pool-pressure valve), so it is hooked on the instance
         object.__setattr__(self, "_inner_materialize",
@@ -211,7 +220,12 @@ class FaultyEngine:
     def _apply(self, spec: FaultSpec, site: str) -> None:
         n = self._plan.occurrences(self.engine_id, site)
         if spec.kind == "delay":
-            time.sleep(spec.delay_s)
+            # degraded, not failed: rounds return empty until the
+            # engine's own clock passes the stall deadline (see
+            # ``stalled_until`` in __init__ for why not time.sleep)
+            now = self._engine.clock()
+            until = max(self.stalled_until, now) + spec.delay_s
+            self.stalled_until = until
             return
         if spec.kind == "hang":
             # the wedge: no exception, no progress — rounds from here on
@@ -242,6 +256,10 @@ class FaultyEngine:
         if self.dead:
             raise EngineDead(f"engine {self.engine_id} is dead")
         if self.hung:
+            return True
+        if self.stalled_until and self._engine.clock() < self.stalled_until:
+            # mid-delay: this engine's round goes empty; counters freeze
+            # (like hang) so the fault timeline stays clock-independent
             return True
         self._check("round")
         eng = self._engine

@@ -315,21 +315,38 @@ class AsyncServer:
 
     def _admission_gate(self, req: Request, depth: int) -> bool:
         """True = admit.  Lazily builds one AdmissionController per
-        (model, bound) — the §9(c) drain check against the best profile
-        among the instances that can serve this model."""
+        (model, bound, serving-set) — the §9(c) drain check against the
+        best CALIBRATED profile among the SCHEDULABLE instances that can
+        serve this model, with the cluster-wide queue depth split across
+        them.  Keying on the serving-set identity rebuilds the gate when
+        instances die, drain, or get replaced (a cached controller built
+        from a dead instance's profile would mis-bound forever)."""
         if self.cfg.admission is None:
             return True
         bound = req.slo if self.cfg.admission == "slo" \
             else float(self.cfg.admission)  # type: ignore[arg-type]
-        key = (req.model, bound)
+        serving = tuple(
+            i.instance_id
+            for idx, i in enumerate(self.controller.instances)
+            if self.controller.is_schedulable(idx)
+            and req.model in i.hw_by_model)
+        if not serving:
+            # can_serve() gated above; a race that empties the set
+            # between the two checks falls through to the queue bound
+            return True
+        # replacements reuse the slot id but may carry a new profile:
+        # the counter in the key forces a rebuild after every replace
+        key = (req.model, bound, serving,
+               getattr(self.controller, "replacements", 0))
         ac = self._admission.get(key)
         if ac is None:
-            hws = [i.hw(req.model) for i in self.controller.instances
-                   if req.model in i.hw_by_model]
+            by_id = {i.instance_id: i for i in self.controller.instances}
+            hws = [by_id[sid].hw(req.model) for sid in serving]
             hw = max(hws, key=lambda h: h.throughput(
                 WorkloadProfile(req.prompt_len, 1.0,
                                 float(req.max_new_tokens), 1.0)))
-            ac = AdmissionController(self.controller.estimator, hw, bound)
+            ac = AdmissionController(self.controller.estimator, hw, bound,
+                                     n_instances=len(serving))
             self._admission[key] = ac
         return ac.admit(req, depth)
 

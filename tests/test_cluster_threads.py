@@ -1,0 +1,360 @@
+"""True-concurrency cluster serving (thread-per-engine agents).
+
+The pyramid: unit tests drive the tri-state engine guard, the deferred
+salvage/evict machinery, and the slice-level routing policy against stub
+engines (fast, exact); the stress test at the bottom runs three REAL
+heterogeneous JAX engines on their own threads with submit/cancel/kill/
+migrate churn under ``QLINT_INVARIANTS=1`` and asserts the run ends with
+zero invariant violations and zero leaked KV blocks.
+"""
+import argparse
+import threading
+import time
+
+import pytest
+
+from repro.analysis.invariants import (check_block_manager,
+                                       check_migration, check_queue_layer,
+                                       check_terminal_states)
+from repro.core import routing
+from repro.core.global_scheduler import InstanceInfo
+from repro.core.qlm import (DEAD, DRAINED, DRAINING, QLMConfig,
+                            QLMController, _engine_guard)
+from repro.core.request import make_request
+from repro.core.request_group import RequestGroup
+from repro.core.rwt_estimator import HardwareProfile
+from repro.core.solver import GroupSpec, InstanceSpec, per_instance_makespan
+from repro.core.virtual_queue import VirtualQueue
+
+
+def _hw(**kw):
+    base = dict(prefill_time=0.05, decode_per_token=0.02, inefficiency=1.2,
+                token_capacity=512, swap_time=0.2, model_max_tokens=32)
+    base.update(kw)
+    return HardwareProfile(**base)
+
+
+def _instance(iid, models, current=None, **hw_kw):
+    return InstanceInfo(iid, {m: _hw(**hw_kw) for m in models}, current,
+                        VirtualQueue(iid))
+
+
+def _controller(instances, **cfg):
+    cfg.setdefault("avg_batch_size", 4)
+    cfg.setdefault("reschedule_on_arrival", False)
+    return QLMController(instances, QLMConfig(**cfg))
+
+
+class _StubStats:
+    tokens_generated = 0
+    prefills = 0
+    prefill_chunks = 0
+    evictions = 0
+    resumes = 0
+    model_swaps = 0
+    cancellations = 0
+
+
+class _LockedStubEngine:
+    """Stub engine WITH a round lock — the threaded-engine shape the
+    tri-state guard and the deferral machinery exist for."""
+
+    def __init__(self, resident=()):
+        self.lock = threading.RLock()
+        self.resident = list(resident)
+        self.block_mgr = None
+        self.slots = []
+        self.stats = _StubStats()
+        self.model_name = "m"
+
+    def num_active(self):
+        return len(self.resident)
+
+    def abandon(self):
+        out, self.resident = self.resident, []
+        for r in out:
+            r._in_flight = False
+        return out
+
+    def take_pushback(self):
+        return None
+
+
+def _hold_lock(lock):
+    """Acquire ``lock`` from a helper thread; returns (started, release,
+    thread) — the caller release()s to let the thread drop the lock."""
+    grabbed, release = threading.Event(), threading.Event()
+
+    def body():
+        with lock:
+            grabbed.set()
+            release.wait(10.0)
+
+    t = threading.Thread(target=body, daemon=True)
+    t.start()
+    assert grabbed.wait(5.0)
+    return release, t
+
+
+# ---------------------------------------------------------------------------
+# tri-state engine guard
+# ---------------------------------------------------------------------------
+
+def test_engine_guard_tristate():
+    class Lockless:
+        pass
+
+    with _engine_guard(Lockless(), timeout=0.1) as got:
+        assert got is None          # no lock: proceed unguarded
+    with _engine_guard(None, timeout=0.1) as got:
+        assert got is None
+
+    eng = _LockedStubEngine()
+    with _engine_guard(eng, timeout=0.1) as got:
+        assert got is True          # free lock: taken
+
+    release, t = _hold_lock(eng.lock)
+    try:
+        with _engine_guard(eng, timeout=0.05) as got:
+            assert got is False     # contended miss: caller must defer
+    finally:
+        release.set()
+        t.join(5.0)
+    # and the guard must not have leaked the (never-acquired) lock
+    with _engine_guard(eng, timeout=0.1) as got:
+        assert got is True
+
+
+# ---------------------------------------------------------------------------
+# deferred salvage / evict (contended-engine LSOs retried from tick)
+# ---------------------------------------------------------------------------
+
+def _dead_engine_setup():
+    insts = [_instance(0, ["m"]), _instance(1, ["m"])]
+    c = _controller(insts)
+    engines = [_LockedStubEngine(), _LockedStubEngine()]
+    c.attach_engines(engines)
+    r = make_request(list(range(8)), "m", "batch1", arrival_time=0.0,
+                     max_new_tokens=4)
+    assert c.submit(r, 0.0)
+    r._in_flight = True
+    r._served_by = 0
+    engines[0].resident.append(r)
+    return c, engines, r
+
+
+def test_mark_dead_defers_salvage_while_engine_mid_round():
+    c, engines, r = _dead_engine_setup()
+    release, t = _hold_lock(engines[0].lock)   # agent "mid-round"
+    try:
+        c.mark_dead(0, 1.0, cause="test kill")
+        # instance is DEAD and its VQ cleared immediately...
+        assert c.health[0].state == DEAD
+        assert c.instances[0].virtual_queue.groups == []
+        # ...but the engine was NOT touched: salvage deferred
+        assert c._pending_salvage == [(0, engines[0])]
+        assert engines[0].resident == [r]
+        assert r._in_flight
+    finally:
+        release.set()
+        t.join(5.0)
+    # next tick retries with the lock free: salvage lands
+    c.tick(1.1)
+    assert c._pending_salvage == []
+    assert engines[0].resident == []
+    assert not r._in_flight
+    assert r.redeliveries == 1
+    check_queue_layer(c)
+
+
+def test_mark_dead_salvages_inline_when_engine_free():
+    c, engines, r = _dead_engine_setup()
+    c.mark_dead(0, 1.0, cause="test kill")
+    assert c._pending_salvage == []
+    assert not r._in_flight and r.redeliveries == 1
+
+
+def test_drain_evict_defers_while_engine_mid_round():
+    insts = [_instance(0, ["m"]), _instance(1, ["m"])]
+    c = _controller(insts)
+    engines = [_LockedStubEngine(), _LockedStubEngine()]
+    c.attach_engines(engines)
+    release, t = _hold_lock(engines[0].lock)
+    try:
+        c.drain_instance(0, 1.0, evict=True)
+        assert c.health[0].state == DRAINING
+        assert 0 in c._pending_evicts
+    finally:
+        release.set()
+        t.join(5.0)
+    c.tick(1.1)
+    assert c._pending_evicts == {}
+    # nothing resident on the stub: the drain completes
+    assert c.health[0].state == DRAINED
+
+
+def test_replace_flushes_deferred_salvage_for_slot():
+    c, engines, r = _dead_engine_setup()
+    release, t = _hold_lock(engines[0].lock)
+    try:
+        c.mark_dead(0, 1.0, cause="test kill")
+        assert c._pending_salvage
+    finally:
+        release.set()
+        t.join(5.0)
+    fresh = _LockedStubEngine()
+    c.replace_instance(0, fresh, 2.0)
+    # the old engine's salvage ran before the slot was reused
+    assert c._pending_salvage == []
+    assert engines[0].resident == []
+    assert not r._in_flight
+
+
+# ---------------------------------------------------------------------------
+# slice-level routing
+# ---------------------------------------------------------------------------
+
+def _reqs(n, model="m", slo_class="batch1"):
+    return [make_request(list(range(8)), model, slo_class,
+                         arrival_time=float(i) * 0.01, max_new_tokens=4)
+            for i in range(n)]
+
+
+def test_slice_groups_splits_fcfs_and_keeps_small_group_identity():
+    small = RequestGroup(model="m", slo=99.0)
+    for r in _reqs(3):
+        small.add(r)
+    big = RequestGroup(model="m", slo=99.0)
+    big_members = _reqs(10)
+    for r in big_members:
+        big.add(r)
+
+    out = routing.slice_groups([small, big], slice_size=4)
+    assert any(g is small for g in out)      # identity kept: no id churn
+    slices = [g for g in out if g is not small]
+    assert [g.size() for g in slices] == [4, 4, 2]
+    # FCFS-contiguous: concatenating the slices reproduces the queue
+    assert [r for g in slices for r in g.requests] == big_members
+    assert all(g.model == "m" for g in slices)
+    # members re-tagged to their slice's group id
+    for g in slices:
+        assert all(r.group_id == g.group_id for r in g.requests)
+
+
+def test_slice_schedule_places_every_slice_once():
+    insts = [_instance(0, ["m"], current="m"),
+             _instance(1, ["m"], current="m",
+                       prefill_time=0.065, decode_per_token=0.026)]
+    c = _controller(insts, routing="slice", slice_size=2)
+    for r in _reqs(8):
+        assert c.submit(r, 0.0)
+    c.reschedule(0.0)
+    assert c.routing_invocations >= 1
+    live = [g for g in c.groups if not g.done()]
+    assert live and all(g.size() <= 2 for g in live)
+    placed = [g for inst in c.instances for g in inst.virtual_queue.groups]
+    assert sorted(g.group_id for g in placed) \
+        == sorted(g.group_id for g in live)      # each exactly once
+    # ≥4 slices over a mildly heterogeneous pair: both instances used
+    assert all(inst.virtual_queue.groups for inst in c.instances)
+    check_queue_layer(c)
+
+
+def test_routing_policy_validated():
+    with pytest.raises(ValueError):
+        _controller([_instance(0, ["m"])], routing="bogus")
+
+
+def test_per_instance_makespan_counts_swaps_on_model_change():
+    groups = [GroupSpec(0, "a", 10.0, {0: 1.0, 1: 2.0}),
+              GroupSpec(1, "b", 10.0, {0: 1.0, 1: 2.0}),
+              GroupSpec(2, "a", 10.0, {0: 1.0, 1: 2.0})]
+    insts = [InstanceSpec(0, "a", {"a": 0.5, "b": 0.5}),
+             InstanceSpec(1, "a", {"a": 0.5, "b": 0.5})]
+    # queue 0 runs a, b, a: two model changes -> two swaps
+    spans = per_instance_makespan([[0, 1, 2], []], groups, insts)
+    assert spans == pytest.approx([1.0 + 0.5 + 1.0 + 0.5 + 1.0, 0.0])
+    # same groups sorted by model on instance 1: one swap, longer drains
+    spans = per_instance_makespan([[], [0, 2, 1]], groups, insts)
+    assert spans == pytest.approx([0.0, 2.0 + 2.0 + 0.5 + 2.0])
+
+
+# ---------------------------------------------------------------------------
+# threaded stress: real engines, churn, invariants on
+# ---------------------------------------------------------------------------
+
+def test_threaded_churn_soak_zero_violations_zero_leaks(monkeypatch):
+    """Three real heterogeneous engines on their own threads; the driver
+    churns submit/cancel/kill/migrate against them while every sampled
+    round and controller tick re-checks the qlint invariants.  The run
+    must end with every request terminal, conservation on every pool
+    (including the dead and drained ones), and no violation raised on
+    any thread (agent-thread exceptions surface via ``stop``)."""
+    monkeypatch.setenv("QLINT_INVARIANTS", "1")
+    monkeypatch.setenv("QLINT_INVARIANTS_SAMPLE", "3")
+    from repro.launch import chaos
+    from repro.serving import ThreadedCluster
+    from repro.serving.faults import FaultPlan
+
+    args = argparse.Namespace(
+        arch="granite-3-2b", instances=3, slots=4, seed=0,
+        max_new_tokens=8, scenario="none", hang_grace=None,
+        retry_budget=2, threaded=True, hetero=True, routing="slice")
+    clock, engines, agents, controller, make_engine, registry = \
+        chaos.build_cluster(args, FaultPlan([], seed=0))
+
+    t0 = clock()
+    prefix = [1, 2, 3, 4]
+    reqs = [make_request(prefix + list(range(10 + i, 22 + i)),
+                         args.arch, ("interactive", "batch1")[i % 2],
+                         arrival_time=t0 + 0.05 * i, max_new_tokens=8)
+            for i in range(12)]
+
+    cluster = ThreadedCluster(controller, agents, engines)
+    cluster.start()
+    killed = drained = False
+    try:
+        pending = list(reqs)
+        deadline = t0 + 120.0
+        while clock() < deadline:
+            now = clock()
+            while pending and pending[0].arrival_time <= now:
+                controller.submit(pending.pop(0), now)
+            submitted = len(reqs) - len(pending)
+            if submitted >= 4:
+                # cancel churn: cooperative flag, engines sweep it
+                reqs[2].cancel_requested = True
+                reqs[3].cancel_requested = True
+            if not killed and submitted >= 6:
+                controller.mark_dead(1, now, cause="churn kill")
+                killed = True
+            if not drained and not pending \
+                    and controller.is_schedulable(0):
+                controller.drain_instance(0, now, evict=True,
+                                          cause="churn migrate")
+                drained = True
+            if not pending and all(chaos._terminal(r) for r in reqs) \
+                    and not any(h.state == "draining"
+                                for h in controller.health):
+                break
+            time.sleep(0.01)
+    finally:
+        cluster.stop()                       # re-raises agent errors
+
+    assert killed and drained
+    assert all(chaos._terminal(r) for r in reqs), \
+        [r for r in reqs if not chaos._terminal(r)]
+    controller.gc_groups()
+    check_queue_layer(controller, where="churn/end")
+    check_terminal_states(controller, engines=engines, where="churn/end")
+    check_migration(controller, engines=engines, where="churn/end")
+    for idx, eng in enumerate(engines):
+        bm = eng.block_mgr
+        check_block_manager(bm, where=f"churn/engine{idx}")
+        assert not bm._seqs, f"engine{idx} leaked sequences"
+        assert not [b for b, p in bm._pins.items() if p > 0], \
+            f"engine{idx} leaked pins"
+    # liveness: the churn actually served traffic (cancels may drop 2)
+    served = sum(1 for r in reqs
+                 if r.finished() and not r.failed and not r.rejected)
+    assert served >= len(reqs) - 2 - controller.cfg.retry_budget
